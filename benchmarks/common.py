@@ -1,0 +1,59 @@
+"""Shared helpers for the benchmark harness (one module per paper artifact).
+
+Each module exposes ``run() -> list[(name, value, derived)]`` rows, printed
+as CSV by benchmarks.run.  Simulator benches share the paper's cluster and
+workload knobs; real-JAX benches run the demo-scale models.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.request import generate_trace
+from repro.serving.simulator import (
+    SchedulerConfig,
+    Simulation,
+    build_serving_config,
+)
+
+# the paper-§7.1 saturating regime (matches EXPERIMENTS.md §Perf headline)
+WORKLOAD = dict(total_requests=400, duration_s=600, seed=0,
+                prompt_len=(64, 512), gen_len=(64, 256))
+
+
+def run_sim(mode="blockllm", n_apps=20, workload=None, **flags):
+    cfg = build_serving_config(n_foundations=3, n_apps=n_apps, mode=mode)
+    trace = generate_trace(list(cfg.chains), **(workload or WORKLOAD))
+    sim = Simulation(cfg, SchedulerConfig(mode=mode, **flags))
+    metrics = sim.run(trace)
+    metrics["switch_time"] = sim.stats["switch_time"]
+    metrics["evictions"] = sim.stats["evictions"]
+    return metrics
+
+
+def demo_zoo(seed: int = 0):
+    """Foundation + FPFT variant (equivalence edge) + three PEFT variants."""
+    from repro.configs import get_config
+    from repro.core import peft
+    from repro.core.zoo import BlockZoo
+    from repro.models.model import build_model
+
+    cfg = get_config("blockllm-demo")
+    params = build_model(cfg).init(jax.random.PRNGKey(seed))
+    zoo = BlockZoo()
+    zoo.register_foundation("base", cfg, params)
+    ft = dict(params)
+    noisy = jax.tree.map(
+        lambda x: x + 0.15 * jnp.std(x) * jax.random.normal(
+            jax.random.PRNGKey(seed + 1), x.shape, x.dtype),
+        jax.tree.map(lambda x: x[1], params["layers"]))
+    ft["layers"] = jax.tree.map(
+        lambda full, rep: full.at[1].set(rep), params["layers"], noisy)
+    zoo.register_fpft("vicuna", cfg, ft, "base")
+    zoo.register_peft("app-lora", cfg, "base", "lora",
+                      peft.create_lora(cfg, jax.random.PRNGKey(seed + 2)))
+    zoo.register_peft("app-adapter", cfg, "base", "adapter",
+                      peft.create_adapter(cfg, jax.random.PRNGKey(seed + 3)))
+    zoo.register_peft("app-bitfit", cfg, "base", "bitfit",
+                      peft.create_bitfit(cfg, jax.random.PRNGKey(seed + 4)))
+    return cfg, params, zoo

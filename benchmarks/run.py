@@ -1,0 +1,36 @@
+# One function per paper table. Print ``name,value,derived`` CSV.
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter on bench name")
+    args = ap.parse_args()
+
+    from benchmarks.paper_tables import ALL
+
+    print("name,value,derived")
+    failures = 0
+    for fn in ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows = fn()
+        except Exception as e:  # report and continue
+            print(f"{fn.__name__},ERROR,{type(e).__name__}:{e}")
+            failures += 1
+            continue
+        for name, value, derived in rows:
+            if isinstance(value, float):
+                value = f"{value:.4f}"
+            print(f"{name},{value},{derived}")
+        print(f"# {fn.__name__} took {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == '__main__':
+    main()

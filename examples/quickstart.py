@@ -1,0 +1,59 @@
+"""Quickstart: build a block zoo from fine-tuned variants, inspect sharing,
+run a chain-of-blocks forward pass (all real JAX, CPU-scale).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import peft
+from repro.core.blocks import run_chain
+from repro.core.zoo import BlockZoo
+from repro.models.model import build_model
+
+
+def main():
+    cfg = get_config("blockllm-demo")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    zoo = BlockZoo()
+    zoo.register_foundation("llama-demo", cfg, params)
+
+    # a full-parameter fine-tune whose layer 1 diverged during training
+    ft = dict(params)
+    noisy = jax.tree.map(
+        lambda x: x + 0.15 * jnp.std(x) * jax.random.normal(
+            jax.random.PRNGKey(1), x.shape, x.dtype),
+        jax.tree.map(lambda x: x[1], params["layers"]))
+    ft["layers"] = jax.tree.map(
+        lambda full, rep: full.at[1].set(rep), params["layers"], noisy)
+    zoo.register_fpft("vicuna-demo", cfg, ft, "llama-demo")
+
+    # three PEFT applications sharing the foundation
+    zoo.register_peft("chatbot", cfg, "llama-demo", "lora",
+                      peft.create_lora(cfg, jax.random.PRNGKey(2)))
+    zoo.register_peft("summarizer", cfg, "llama-demo", "adapter",
+                      peft.create_adapter(cfg, jax.random.PRNGKey(3)))
+    zoo.register_peft("classifier", cfg, "llama-demo", "bitfit",
+                      peft.create_bitfit(cfg, jax.random.PRNGKey(4)))
+
+    print(f"models registered : {len(zoo.chains)}")
+    print(f"blocks in zoo     : {len(zoo.blocks)}")
+    print(f"zoo storage       : {zoo.zoo_bytes() / 1e6:.1f} MB")
+    print(f"per-model storage : {zoo.per_model_bytes() / 1e6:.1f} MB")
+    print(f"redundancy removed: {zoo.redundancy_fraction() * 100:.1f}%  "
+          f"(paper Fig. 5: up to 92.1%)")
+    for (a, b), s in list(zoo.equivalences.items())[:2]:
+        print(f"equivalence edge  : {a} <-> {b}  cos={s:.4f}")
+
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (2, 16), 0,
+                                cfg.vocab_size)
+    logits = run_chain(zoo, zoo.chains["chatbot"], tokens)
+    print(f"chain forward     : logits {logits.shape}, "
+          f"finite={bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""End-to-end driver: serve a small multi-tenant model zoo with batched
+requests — real JAX prefill/decode through chains of blocks, plus the
+cluster-scale evaluation of the same scheduler on the paper's 12-device
+cluster.
+
+    PYTHONPATH=src python examples/serve_multitenant.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import BlockEngine, adaptive_serving_similarity
+from repro.serving.request import generate_trace
+from repro.serving.simulator import (
+    SchedulerConfig,
+    Simulation,
+    build_serving_config,
+)
+
+
+def build_zoo():
+    from repro.configs import get_config
+    from repro.core import peft
+    from repro.core.zoo import BlockZoo
+    from repro.models.model import build_model
+
+    cfg = get_config("blockllm-demo")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    zoo = BlockZoo()
+    zoo.register_foundation("base", cfg, params)
+    ft = dict(params)
+    noisy = jax.tree.map(
+        lambda x: x + 0.15 * jnp.std(x) * jax.random.normal(
+            jax.random.PRNGKey(1), x.shape, x.dtype),
+        jax.tree.map(lambda x: x[1], params["layers"]))
+    ft["layers"] = jax.tree.map(
+        lambda full, rep: full.at[1].set(rep), params["layers"], noisy)
+    zoo.register_fpft("vicuna", cfg, ft, "base")
+    zoo.register_peft("chatbot", cfg, "base", "lora",
+                      peft.create_lora(cfg, jax.random.PRNGKey(2)))
+    return cfg, zoo
+
+
+def main():
+    # ---- real execution: batched requests from three tenants ----
+    cfg, zoo = build_zoo()
+    engine = BlockEngine(zoo)
+    rng = jax.random.PRNGKey(7)
+    for app in ("base", "vicuna", "chatbot"):
+        prompts = jax.random.randint(rng, (4, 24), 0, cfg.vocab_size)
+        t0 = time.perf_counter()
+        res = engine.generate(zoo.chains[app], prompts, gen_len=8)
+        dt = time.perf_counter() - t0
+        print(f"[{app:8s}] batch=4 prompt=24 gen=8 -> tokens {res.tokens.shape}"
+              f" in {dt:.2f}s  sample={res.tokens[0][:6].tolist()}")
+
+    sim, n = adaptive_serving_similarity(
+        zoo, engine, "vicuna",
+        jax.random.randint(rng, (4, 24), 0, cfg.vocab_size), gen_len=6)
+    print(f"adaptive serving  : {n} block(s) swapped, output prob cosine "
+          f"{sim:.3f} (paper Fig. 20: 0.88)")
+
+    # ---- cluster-scale evaluation: paper §7.1 setup ----
+    print("\n12-device cluster, 20 apps, 400 requests (paper §7.1):")
+    for mode in ("blockllm", "pm", "ps"):
+        scfg = build_serving_config(n_foundations=3, n_apps=20, mode=mode)
+        trace = generate_trace(list(scfg.chains), total_requests=400,
+                               duration_s=600, seed=0,
+                               prompt_len=(64, 512), gen_len=(64, 256))
+        m = Simulation(scfg, SchedulerConfig(mode=mode)).run(trace)
+        print(f"  {mode:9s} median={m['median_latency']:6.1f}s "
+              f"p95={m['p95_latency']:6.1f}s "
+              f"thpt={m['throughput_tokens_s']:6.1f} tok/s "
+              f"util={m['gpu_utilization'] * 100:4.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpointer import Checkpointer, install_preemption_hook  # noqa: F401

@@ -1,0 +1,137 @@
+"""Sharded, elastic, async checkpointing (no orbax dependency).
+
+- save: each param leaf -> one .npy (host-gathered at laptop scale; on a real
+  multi-host pod each host writes its local shards — the layout keeps one
+  file per leaf so that path is a drop-in change), plus a JSON manifest with
+  the treedef and step.
+- restore: rebuilds the pytree and (optionally) re-shards onto a DIFFERENT
+  mesh ("elastic scaling"): the array is placed with the target
+  NamedSharding, so a 2x16x16 checkpoint restores onto 16x16 and vice versa.
+- async: writes happen on a background thread; ``wait()`` joins.
+- preemption: ``install_preemption_hook`` checkpoints on SIGTERM.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [str(p) for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return leaves, paths, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, max_to_keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.max_to_keep = max_to_keep
+        self._pool = ThreadPoolExecutor(max_workers=1)  # serialized writes
+        self._pending = []
+        self._pending_steps = set()
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, *, blocking: bool = False):
+        ckpt_dir = self.dir / f"step_{step:08d}"
+        if ckpt_dir.exists() or step in self._pending_steps:
+            if blocking:
+                self.wait()
+            return ckpt_dir  # idempotent
+        self._pending_steps.add(step)
+        leaves, paths, treedef = _flatten(tree)
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+
+        def _write():
+            tmp = self.dir / f".tmp_step_{step:08d}"
+            tmp.mkdir(parents=True, exist_ok=True)
+            manifest = {"step": step, "leaves": []}
+            for i, (arr, path) in enumerate(zip(host_leaves, paths)):
+                fn = f"leaf_{i:05d}.npy"
+                np.save(tmp / fn, arr)
+                manifest["leaves"].append(
+                    {"file": fn, "path": path, "shape": list(arr.shape),
+                     "dtype": str(arr.dtype)})
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if ckpt_dir.exists():
+                import shutil
+
+                shutil.rmtree(ckpt_dir)
+            tmp.rename(ckpt_dir)  # atomic publish
+            self._pending_steps.discard(step)
+            self._gc()
+
+        fut = self._pool.submit(_write)
+        self._pending.append(fut)
+        if blocking:
+            fut.result()
+        return ckpt_dir
+
+    def wait(self):
+        for f in self._pending:
+            f.result()
+        self._pending.clear()
+
+    def _gc(self):
+        steps = sorted(self.dir.glob("step_*"))
+        for old in steps[: -self.max_to_keep]:
+            import shutil
+
+            shutil.rmtree(old, ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        import re
+
+        steps = sorted(p for p in self.dir.glob("step_*")
+                       if re.fullmatch(r"step_\d+", p.name))
+        if not steps:
+            return None
+        return int(steps[-1].name.split("_")[1])
+
+    def restore(self, abstract_tree: Any, *, step: Optional[int] = None,
+                shardings: Any = None) -> Any:
+        """abstract_tree fixes structure/dtypes; ``shardings`` (same-structure
+        NamedShardings or None) enables elastic resharding onto any mesh."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        ckpt_dir = self.dir / f"step_{step:08d}"
+        manifest = json.loads((ckpt_dir / "manifest.json").read_text())
+        leaves, paths, treedef = _flatten(abstract_tree)
+        assert len(leaves) == len(manifest["leaves"]), \
+            f"tree mismatch: {len(leaves)} vs {len(manifest['leaves'])}"
+        shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                        if shardings is not None else [None] * len(leaves))
+        out = []
+        for meta, ref, shd in zip(manifest["leaves"], leaves, shard_leaves):
+            arr = np.load(ckpt_dir / meta["file"])
+            if shd is not None:
+                out.append(jax.device_put(arr, shd))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return treedef.unflatten(out)
+
+
+def install_preemption_hook(ckpt: Checkpointer, get_state, signals=(signal.SIGTERM,)):
+    """On preemption, write a final blocking checkpoint (SpotServe-style
+    stateful handoff, DESIGN.md §3)."""
+
+    def _handler(signum, frame):
+        step, tree = get_state()
+        ckpt.save(step, tree, blocking=True)
+
+    for s in signals:
+        signal.signal(s, _handler)
+    return _handler

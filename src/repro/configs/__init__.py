@@ -1,0 +1,9 @@
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    applicable_shapes,
+    get_config,
+    get_reduced_config,
+    list_configs,
+)

@@ -1,0 +1,248 @@
+"""Block abstraction (paper §4.2).
+
+A Block is the unit of provisioning: a named pytree of params plus a pure
+apply function determined by ``kind``.  Partitioning respects architectural
+boundaries — the finest-grained components are {embedding, attention, ffn,
+lm_head}; the default (avoid over-partitioning) is one Block per transformer
+layer, split into attention/ffn only when an adapter forces it (Fig. 11).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.transformer import _mlp_layer, _qkv
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_hash(tree) -> str:
+    h = hashlib.sha1()
+    for path, leaf in sorted(
+            jax.tree_util.tree_flatten_with_path(tree)[0],
+            key=lambda kv: str(kv[0])):
+        h.update(str(path).encode())
+        h.update(np.ascontiguousarray(jax.device_get(leaf)).tobytes())
+    return h.hexdigest()[:16]
+
+
+@dataclass
+class Block:
+    id: str
+    kind: str  # embed | layer | attention | ffn | lm_head | lora | adapter | bitfit | stitch
+    model: str  # model that first contributed it
+    layer_idx: Optional[int]
+    d_in: int
+    d_out: int
+    params: dict
+    cfg: Optional[ModelConfig] = None
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def n_params(self) -> int:
+        return sum(x.size for x in jax.tree.leaves(self.params))
+
+    @property
+    def bytes(self) -> int:
+        return tree_bytes(self.params)
+
+    def flops_per_token(self) -> float:
+        """2 * params is the dense-matmul flops estimate per token."""
+        return 2.0 * self.n_params
+
+
+# ---------------------------------------------------------------------------
+# apply fns (full-sequence; serving engine drives these per block instance)
+# ---------------------------------------------------------------------------
+
+
+def _attn_sublayer(x, p, cfg, positions, adapters=()):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    wq, wk, wv = p["wq"], p["wk"], p["wv"]
+    q = jnp.einsum("bsd,dhk->bshk", h, wq.astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, wk.astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, wv.astype(h.dtype))
+    for a in adapters:
+        if a.kind == "lora":
+            ap = a.params
+            s = ap["scaling"].astype(h.dtype)
+            dq = jnp.einsum("bsd,dr,re->bse", h, ap["a_q"].astype(h.dtype),
+                            ap["b_q"].astype(h.dtype)) * s
+            dv = jnp.einsum("bsd,dr,re->bse", h, ap["a_v"].astype(h.dtype),
+                            ap["b_v"].astype(h.dtype)) * s
+            q = q + dq.reshape(q.shape).astype(h.dtype)
+            v = v + dv.reshape(v.shape).astype(h.dtype)
+        elif a.kind == "bitfit":
+            q = q + a.params["bq"].astype(h.dtype)
+            k = k + a.params["bk"].astype(h.dtype)
+            v = v + a.params["bv"].astype(h.dtype)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = L.causal_attention(q, k, v, chunk=cfg.attn_chunk,
+                           window=cfg.sliding_window)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(h.dtype))
+    return x + o
+
+
+def _ffn_sublayer(x, p, cfg, adapters=()):
+    out = _mlp_layer(x, p, cfg, None)
+    for a in adapters:
+        if a.kind == "adapter":
+            ap = a.params
+            h = jax.nn.gelu(jnp.einsum("bsd,de->bse", out,
+                                       ap["down"].astype(out.dtype)))
+            out = out + jnp.einsum("bse,ed->bsd", h, ap["up"].astype(out.dtype))
+    return out
+
+
+def apply_block(block: Block, x, *, positions=None, adapters=()):
+    """x: hidden states (B, S, D) — or token ids for embed blocks."""
+    cfg = block.cfg
+    p = block.params
+    if block.kind == "embed":
+        return jnp.take(p["embed"], x, axis=0).astype(L.COMPUTE_DTYPE)
+    if block.kind == "lm_head":
+        h = L.rms_norm(x, p["final_ln"], cfg.norm_eps)
+        return jnp.einsum("bsd,dv->bsv", h, p["lm_head"].astype(h.dtype))
+    if block.kind == "layer":
+        B, S = x.shape[:2]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        x0 = x
+        x = _attn_sublayer(x, p, cfg, positions, adapters)
+        out = _ffn_sublayer(x, p, cfg, adapters)
+        if "recover_a" in p:  # surrogate LoRA recovery (paper §5.2)
+            out = out + jnp.einsum(
+                "bsd,dr,re->bse", x0, p["recover_a"].astype(x0.dtype),
+                p["recover_b"].astype(x0.dtype))
+        return out
+    if block.kind == "attention":
+        B, S = x.shape[:2]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        return _attn_sublayer(x, p, cfg, positions, adapters)
+    if block.kind == "ffn":
+        return _ffn_sublayer(x, p, cfg, adapters)
+    if block.kind == "stitch":
+        B, S, D = x.shape
+        posval = jnp.full((B, S, 1), float(block.meta["position_value"]),
+                          x.dtype)
+        xin = jnp.concatenate([x, posval], axis=-1)
+        return jnp.einsum("bse,ed->bsd", xin, p["w"].astype(x.dtype))
+    raise ValueError(f"apply_block: {block.kind}")
+
+
+# ---------------------------------------------------------------------------
+# stateful block execution (real serving engine: per-block KV caches)
+# ---------------------------------------------------------------------------
+
+
+def block_prefill(block: Block, x, *, positions=None, adapters=(),
+                  max_len=None):
+    """Like apply_block, but attention-bearing blocks also return their KV
+    cache (dict) for subsequent block_decode calls."""
+    cfg = block.cfg
+    p = block.params
+    if block.kind not in ("layer", "attention"):
+        return apply_block(block, x, positions=positions, adapters=adapters), None
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(h.dtype))
+    q, k, v = _peft_qkv(h, q, k, v, adapters)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k_r = L.apply_rope(k, positions, cfg.rope_theta)
+    o = L.causal_attention(q, k_r, v, chunk=cfg.attn_chunk,
+                           window=cfg.sliding_window)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(h.dtype))
+    out = x + o
+    cache = L.finalize_prefill_cache(k_r, v, cfg, max_len)
+    if block.kind == "layer":
+        out = _ffn_sublayer(out, p, cfg, adapters)
+    return out, cache
+
+
+def block_decode(block: Block, x, cache, kv_len, *, adapters=()):
+    """One-token step.  x: (B, 1, D); cache from block_prefill; kv_len (B,).
+
+    Returns (out, new_cache)."""
+    cfg = block.cfg
+    p = block.params
+    if block.kind not in ("layer", "attention"):
+        return apply_block(block, x, adapters=adapters), cache
+    B = x.shape[0]
+    positions = kv_len[:, None]
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(h.dtype))
+    q, k, v = _peft_qkv(h, q, k, v, adapters)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    cache = L.cache_insert(cache, k, v, kv_len, cfg)
+    kc, vc = L.cache_kv_arrays(cache, cfg)
+    S = kc.shape[1]
+    valid = jnp.minimum(kv_len + 1, S)
+    o = L.decode_attention(q, kc, vc, valid, window=0)
+    o = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"].astype(x.dtype))
+    out = x + o
+    if block.kind == "layer":
+        out = _ffn_sublayer(out, p, cfg, adapters)
+    return out, cache
+
+
+def _peft_qkv(h, q, k, v, adapters):
+    for a in adapters:
+        if a.kind == "lora":
+            ap = a.params
+            s = ap["scaling"].astype(h.dtype)
+            dq = jnp.einsum("bsd,dr,re->bse", h, ap["a_q"].astype(h.dtype),
+                            ap["b_q"].astype(h.dtype)) * s
+            dv = jnp.einsum("bsd,dr,re->bse", h, ap["a_v"].astype(h.dtype),
+                            ap["b_v"].astype(h.dtype)) * s
+            q = q + dq.reshape(q.shape).astype(h.dtype)
+            v = v + dv.reshape(v.shape).astype(h.dtype)
+        elif a.kind == "bitfit":
+            q = q + a.params["bq"].astype(h.dtype)
+            k = k + a.params["bk"].astype(h.dtype)
+            v = v + a.params["bv"].astype(h.dtype)
+    return q, k, v
+
+
+@dataclass
+class ChainStep:
+    block_id: str
+    adapter_ids: Tuple[str, ...] = ()
+
+
+@dataclass
+class BlockChain:
+    model: str
+    steps: List[ChainStep]
+
+    def block_ids(self):
+        return [s.block_id for s in self.steps]
+
+
+def run_chain(zoo, chain: BlockChain, tokens, *, block_override=None):
+    """Execute a chain end-to-end (offline/eval path; the online engine in
+    repro.serving drives blocks individually with KV state)."""
+    x = tokens
+    for step in chain.steps:
+        bid = (block_override or {}).get(step.block_id, step.block_id)
+        block = zoo.blocks[bid]
+        adapters = tuple(zoo.blocks[a] for a in step.adapter_ids)
+        x = apply_block(block, x, adapters=adapters)
+    return x

@@ -1,0 +1,84 @@
+"""Block equivalence (paper §4.1, C1).
+
+- Identical architecture: weighted parameter cosine similarity
+  Eq(A_i, B_i) = sum_p s(A_i^p) cos(A_i^p, B_i^p) / sum_p s(A_i^p).
+- Different embedding sizes: cosine similarity of output *vocabulary
+  probability* distributions under a shared probe set (each side projected
+  through its own lm_head).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _cos(a, b) -> float:
+    a = np.asarray(jax.device_get(a), np.float64).ravel()
+    b = np.asarray(jax.device_get(b), np.float64).ravel()
+    na, nb = np.linalg.norm(a), np.linalg.norm(b)
+    if na == 0.0 or nb == 0.0:
+        return 1.0 if na == nb else 0.0
+    return float(np.dot(a, b) / (na * nb))
+
+
+def param_equivalence(params_a: dict, params_b: dict) -> float:
+    """Weighted average of per-parameter cosine similarities (Eq. §4.1)."""
+    flat_a = {str(p): x for p, x in
+              jax.tree_util.tree_flatten_with_path(params_a)[0]}
+    flat_b = {str(p): x for p, x in
+              jax.tree_util.tree_flatten_with_path(params_b)[0]}
+    num = den = 0.0
+    for key, a in flat_a.items():
+        b = flat_b.get(key)
+        if b is None or b.shape != a.shape:
+            return 0.0  # structurally different -> not parametric-equivalent
+        s = a.size
+        num += s * _cos(a, b)
+        den += s
+    return num / max(den, 1.0)
+
+
+def vocab_probability_similarity(probs_a, probs_b) -> float:
+    """Mean per-token cosine of two vocab-probability tensors (B, S, V) —
+    V may differ only if a shared probe tokenizer is used; here V matches
+    (same tokenizer family) while d_model differs."""
+    a = np.asarray(jax.device_get(probs_a), np.float64)
+    b = np.asarray(jax.device_get(probs_b), np.float64)
+    a = a.reshape(-1, a.shape[-1])
+    b = b.reshape(-1, b.shape[-1])
+    dot = (a * b).sum(-1)
+    denom = np.linalg.norm(a, axis=-1) * np.linalg.norm(b, axis=-1) + 1e-12
+    return float((dot / denom).mean())
+
+
+def layerwise_vocab_probs(model, params, cfg, tokens, upto_layer: int):
+    """Run the first ``upto_layer`` layers and project through this model's
+    own lm_head -> vocab probabilities (the §4.1 cross-size probe)."""
+    from repro.models import layers as L
+
+    h = jnp.take(params["embed"], tokens, axis=0).astype(L.COMPUTE_DTYPE)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    from repro.models.transformer import _dense_layer_fwd
+
+    stacked = params["layers"]
+    for i in range(upto_layer):
+        lp = jax.tree.map(lambda x: x[i], stacked)
+        h = _dense_layer_fwd(h, lp, cfg, positions, None)
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"].astype(h.dtype))
+    return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+
+def cross_size_equivalence(model_a, params_a, cfg_a, model_b, params_b, cfg_b,
+                           tokens, frac: float = 0.5) -> float:
+    """Equivalence between same-depth-fraction prefixes of two models with
+    different embedding sizes (paper Fig. 10)."""
+    la = max(1, int(cfg_a.num_layers * frac))
+    lb = max(1, int(cfg_b.num_layers * frac))
+    pa = layerwise_vocab_probs(model_a, params_a, cfg_a, tokens, la)
+    pb = layerwise_vocab_probs(model_b, params_b, cfg_b, tokens, lb)
+    return vocab_probability_similarity(pa, pb)

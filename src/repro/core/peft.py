@@ -1,0 +1,62 @@
+"""Parameter-efficient fine-tuning deltas (paper Table 1 / Fig. 4).
+
+Implemented: LoRA (q,v projections), Adapter (bottleneck after FFN),
+BitFit (qkv bias deltas).  Each returns per-layer adapter param trees that
+the block zoo stores as tiny adapter blocks; foundation blocks are shared.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def create_lora(cfg: ModelConfig, rng, rank: int = 8, scaling: float = 1.0):
+    """Per-layer LoRA on wq/wv.  Returns list of param dicts (len L)."""
+    hd = cfg.resolved_head_dim
+    out = []
+    for i in range(cfg.num_layers):
+        k1, k2, rng = jax.random.split(rng, 3)
+        out.append({
+            "a_q": L.dense_init(k1, (cfg.d_model, rank)),
+            "b_q": jnp.zeros((rank, cfg.num_heads * hd), jnp.float32),
+            "a_v": L.dense_init(k2, (cfg.d_model, rank)),
+            "b_v": jnp.zeros((rank, cfg.num_kv_heads * hd), jnp.float32),
+            "scaling": jnp.asarray(scaling, jnp.float32),
+        })
+    return out
+
+
+def create_adapter(cfg: ModelConfig, rng, bottleneck: int = 32):
+    out = []
+    for i in range(cfg.num_layers):
+        k1, k2, rng = jax.random.split(rng, 3)
+        out.append({
+            "down": L.dense_init(k1, (cfg.d_model, bottleneck)),
+            "up": 1e-3 * L.dense_init(k2, (bottleneck, cfg.d_model),
+                                      in_axis_size=bottleneck),
+        })
+    return out
+
+
+def create_bitfit(cfg: ModelConfig, rng, init_scale: float = 1e-3):
+    hd = cfg.resolved_head_dim
+    out = []
+    for i in range(cfg.num_layers):
+        k1, k2, k3, rng = jax.random.split(rng, 4)
+        out.append({
+            "bq": init_scale * jax.random.normal(k1, (cfg.num_heads, hd)),
+            "bk": init_scale * jax.random.normal(k2, (cfg.num_kv_heads, hd)),
+            "bv": init_scale * jax.random.normal(k3, (cfg.num_kv_heads, hd)),
+        })
+    return out
+
+
+def shared_param_fraction(foundation_params, adapter_trees) -> float:
+    """Paper Table 1: % of a fine-tuned model's params shared with the
+    foundation (foundation / (foundation + adapters))."""
+    base = sum(x.size for x in jax.tree.leaves(foundation_params))
+    extra = sum(x.size for x in jax.tree.leaves(adapter_trees))
+    return base / (base + extra)

@@ -1,0 +1,113 @@
+"""Stitching blocks (paper §4.3): a generalizable Linear(d1+1 -> d2) that
+routes requests between equivalent blocks of different embedding sizes.
+
+The +1 input dimension carries the *position value* of the stitching point
+(sum of head/tail positions in the original chains), making one stitch
+generalize across stitch points.  Training keeps every other block frozen
+and regresses the large model's hidden state at the matched depth,
+progressively moving from shallow to deep stitch points (§4.3).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.blocks import Block
+from repro.models import layers as L
+from repro.models.transformer import _dense_layer_fwd
+
+
+def _hidden_at_layer(params, cfg, tokens, upto: int):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(L.COMPUTE_DTYPE)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    for i in range(upto):
+        lp = jax.tree.map(lambda x: x[i], params["layers"])
+        h = _dense_layer_fwd(h, lp, cfg, positions, None)
+    return h
+
+
+def apply_stitch(w, h, position_value: float):
+    B, S, D = h.shape
+    posval = jnp.full((B, S, 1), position_value, h.dtype)
+    return jnp.einsum("bse,ed->bsd", jnp.concatenate([h, posval], -1),
+                      w.astype(h.dtype))
+
+
+def train_stitching_block(
+        params_a, cfg_a: ModelConfig, params_b, cfg_b: ModelConfig,
+        stitch_points: List[Tuple[int, int]], tokens, *,
+        steps_per_point: int = 120, lr: float = 1e-2, rng=None):
+    """Train W: (d_a + 1, d_b) matching model B's hidden at matched depths.
+
+    stitch_points: (layer_in_A, layer_in_B) pairs, shallow -> deep
+    (progressive schedule per §4.3).  Returns (w, per-point losses).
+    """
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    d_a, d_b = cfg_a.d_model, cfg_b.d_model
+    w = L.dense_init(rng, (d_a + 1, d_b))
+    m = jnp.zeros_like(w)
+    v = jnp.zeros_like(w)
+    losses = []
+    step_count = 0
+    for (la, lb) in stitch_points:
+        h_a = jax.lax.stop_gradient(_hidden_at_layer(params_a, cfg_a, tokens, la))
+        h_b = jax.lax.stop_gradient(_hidden_at_layer(params_b, cfg_b, tokens, lb))
+        pos_value = float(la + lb)
+
+        def loss_fn(w_):
+            pred = apply_stitch(w_, h_a, pos_value)
+            return jnp.mean(jnp.square(pred.astype(jnp.float32)
+                                       - h_b.astype(jnp.float32)))
+
+        grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        for _ in range(steps_per_point):
+            step_count += 1
+            loss, g = grad_fn(w)
+            m = 0.9 * m + 0.1 * g
+            v = 0.999 * v + 0.001 * jnp.square(g)
+            mh = m / (1 - 0.9 ** step_count)
+            vh = v / (1 - 0.999 ** step_count)
+            w = w - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        losses.append(float(loss))
+    return w, losses
+
+
+def make_stitch_block(w, model_a: str, model_b: str, d_a: int, d_b: int,
+                      position_value: float) -> Block:
+    from repro.core.blocks import tree_hash
+
+    params = {"w": w}
+    return Block(id=f"st-{tree_hash(params)}", kind="stitch",
+                 model=f"{model_a}->{model_b}", layer_idx=None,
+                 d_in=d_a, d_out=d_b, params=params, cfg=None,
+                 meta={"position_value": position_value})
+
+
+def stitched_head_similarity(params_a, cfg_a, params_b, cfg_b, w,
+                             stitch_point: Tuple[int, int], tokens) -> float:
+    """Paper Table 3: LM-head cosine similarity of the stitched model vs the
+    large model."""
+    from repro.core.equivalence import vocab_probability_similarity
+
+    la, lb = stitch_point
+    h_a = _hidden_at_layer(params_a, cfg_a, tokens, la)
+    h = apply_stitch(w, h_a, float(la + lb))
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    for i in range(lb, cfg_b.num_layers):
+        lp = jax.tree.map(lambda x: x[i], params_b["layers"])
+        h = _dense_layer_fwd(h, lp, cfg_b, positions, None)
+    h = L.rms_norm(h, params_b["final_ln"], cfg_b.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, params_b["lm_head"].astype(h.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+
+    h_ref = _hidden_at_layer(params_b, cfg_b, tokens, cfg_b.num_layers)
+    h_ref = L.rms_norm(h_ref, params_b["final_ln"], cfg_b.norm_eps)
+    ref_logits = jnp.einsum("bsd,dv->bsv", h_ref,
+                            params_b["lm_head"].astype(h_ref.dtype))
+    ref_probs = jax.nn.softmax(ref_logits.astype(jnp.float32), -1)
+    return vocab_probability_similarity(probs, ref_probs)

@@ -1,0 +1,109 @@
+"""Block surrogates for speculative execution (paper §5.2, Table 4).
+
+Structured pruning in the spirit of LLM-Pruner [23]: remove the FFN hidden
+channels and attention KV-groups with the least output impact, keeping the
+block's interface (d_model in/out) intact so the surrogate is a drop-in
+predictor.  Fidelity = output cosine similarity on probe data; speedup
+estimate = FLOP ratio.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocks import Block, apply_block, tree_hash
+
+
+def _topk_mask_indices(scores, keep: int):
+    idx = jnp.argsort(scores)[::-1][:keep]
+    return jnp.sort(idx)
+
+
+def build_surrogate(block: Block, prune_ratio: float = 0.5) -> Block:
+    """Structured-prune a 'layer' (or 'ffn'/'attention') block."""
+    p = dict(block.params)
+    cfg = block.cfg
+    new_cfg = cfg
+    if "w_gate" in p:
+        F = p["w_gate"].shape[1]
+        keep = max(1, int(round(F * (1.0 - prune_ratio))))
+        # channel importance: |gate_in| * |down_out| (LLM-Pruner style)
+        imp = (jnp.linalg.norm(p["w_gate"], axis=0)
+               * jnp.linalg.norm(p["w_down"], axis=1))
+        idx = _topk_mask_indices(imp, keep)
+        p["w_gate"] = p["w_gate"][:, idx]
+        p["w_up"] = p["w_up"][:, idx]
+        p["w_down"] = p["w_down"][idx, :]
+        new_cfg = new_cfg.replace(d_ff=keep)
+    if "wq" in p and block.kind in ("layer", "attention"):
+        H = p["wq"].shape[1]
+        KVH = p["wk"].shape[1]
+        G = H // KVH
+        keep_kv = max(1, int(round(KVH * (1.0 - prune_ratio))))
+        imp = jnp.linalg.norm(p["wk"].reshape(p["wk"].shape[0], KVH, -1),
+                              axis=(0, 2))
+        kv_idx = np.asarray(_topk_mask_indices(imp, keep_kv))
+        q_idx = np.concatenate([np.arange(i * G, (i + 1) * G) for i in kv_idx])
+        p["wq"] = p["wq"][:, q_idx]
+        p["wk"] = p["wk"][:, kv_idx]
+        p["wv"] = p["wv"][:, kv_idx]
+        p["wo"] = p["wo"][q_idx, :, :]
+        new_cfg = new_cfg.replace(num_heads=len(q_idx), num_kv_heads=keep_kv,
+                                  head_dim=cfg.resolved_head_dim)
+    sur = Block(id=f"su-{tree_hash(p)}", kind=block.kind, model=block.model,
+                layer_idx=block.layer_idx, d_in=block.d_in, d_out=block.d_out,
+                params=p, cfg=new_cfg,
+                meta={"surrogate_of": block.id, "prune_ratio": prune_ratio})
+    return sur
+
+
+def surrogate_fidelity(block: Block, surrogate: Block, probe) -> float:
+    """Output cosine similarity on probe hidden states (paper Table 4)."""
+    out_a = np.asarray(jax.device_get(apply_block(block, probe)), np.float64)
+    out_b = np.asarray(jax.device_get(apply_block(surrogate, probe)), np.float64)
+    a = out_a.reshape(-1)
+    b = out_b.reshape(-1)
+    return float(np.dot(a, b) / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-12))
+
+
+def surrogate_speedup(block: Block, surrogate: Block) -> float:
+    return block.flops_per_token() / max(surrogate.flops_per_token(), 1.0)
+
+
+def recover_with_lora(block: Block, surrogate: Block, probe, *,
+                      rank: int = 8, steps: int = 100, lr: float = 5e-3,
+                      rng=None) -> Block:
+    """Post-pruning LoRA recovery (paper §5.2): fit a low-rank correction on
+    the surrogate's FFN output to match the full block on probe data."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    D = block.d_in
+    k1, k2 = jax.random.split(rng)
+    a = 0.01 * jax.random.normal(k1, (D, rank), jnp.float32)
+    b = jnp.zeros((rank, D), jnp.float32)
+    target = jax.lax.stop_gradient(apply_block(block, probe))
+    base = jax.lax.stop_gradient(apply_block(surrogate, probe))
+
+    def loss_fn(ab):
+        a_, b_ = ab
+        corr = jnp.einsum("bsd,dr,re->bse", probe.astype(jnp.float32),
+                          a_, b_)
+        pred = base.astype(jnp.float32) + corr
+        return jnp.mean(jnp.square(pred - target.astype(jnp.float32)))
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    m = (jnp.zeros_like(a), jnp.zeros_like(b))
+    params = (a, b)
+    for i in range(1, steps + 1):
+        loss, g = grad_fn(params)
+        m = jax.tree.map(lambda mm, gg: 0.9 * mm + 0.1 * gg, m, g)
+        params = jax.tree.map(lambda pp, mm: pp - lr * mm, params, m)
+    p = dict(surrogate.params)
+    p["recover_a"], p["recover_b"] = params
+    out = Block(id=f"su-{tree_hash(p)}", kind=surrogate.kind,
+                model=surrogate.model, layer_idx=surrogate.layer_idx,
+                d_in=surrogate.d_in, d_out=surrogate.d_out, params=p,
+                cfg=surrogate.cfg, meta=dict(surrogate.meta, recovered=True))
+    return out

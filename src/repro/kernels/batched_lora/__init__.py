@@ -1,0 +1,1 @@
+from repro.kernels.batched_lora.ops import batched_lora, pack_segments  # noqa: F401

@@ -1,0 +1,40 @@
+"""Jitted wrapper + the segment packing helper the serving batcher uses."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.batched_lora.kernel import batched_lora_matmul
+from repro.kernels.batched_lora.ref import batched_lora_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bf", "scaling", "impl"))
+def batched_lora(x, w, a, b, tile_groups, *, bt: int = 128, bf: int = 256,
+                 scaling: float = 1.0, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return batched_lora_ref(x, w, a, b, tile_groups, bt=bt, scaling=scaling)
+    return batched_lora_matmul(x, w, a, b, tile_groups, bt=bt, bf=bf,
+                               scaling=scaling, interpret=(impl == "interpret"))
+
+
+def pack_segments(group_ids, bt: int = 128):
+    """Pack per-row adapter ids into tile-aligned segments.
+
+    Returns (row_order, tile_groups, padded_len): rows sorted by adapter,
+    each adapter segment padded up to a multiple of ``bt`` (padding rows
+    reuse the segment's adapter id and are masked out downstream).
+    """
+    group_ids = np.asarray(group_ids)
+    order = np.argsort(group_ids, kind="stable")
+    tiles = []
+    row_order = []
+    for g in np.unique(group_ids):
+        rows = order[group_ids[order] == g]
+        pad = (-len(rows)) % bt
+        row_order.extend(rows.tolist() + [-1] * pad)
+        tiles.extend([int(g)] * ((len(rows) + pad) // bt))
+    return (np.array(row_order, np.int32), np.array(tiles, np.int32),
+            len(row_order))

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for segment-aligned batched LoRA."""
+import jax.numpy as jnp
+
+
+def batched_lora_ref(x, w, a, b, tile_groups, *, bt: int = 128,
+                     scaling: float = 1.0):
+    T, D = x.shape
+    bt = min(bt, T)
+    groups = jnp.repeat(tile_groups, bt)  # (T,) per-row adapter id
+    base = jnp.einsum("td,df->tf", x.astype(jnp.float32), w.astype(jnp.float32))
+    ag = a[groups].astype(jnp.float32)  # (T, D, r)
+    bg = b[groups].astype(jnp.float32)  # (T, r, F)
+    xa = jnp.einsum("td,tdr->tr", x.astype(jnp.float32), ag)
+    delta = jnp.einsum("tr,trf->tf", xa, bg)
+    return (base + scaling * delta).astype(x.dtype)

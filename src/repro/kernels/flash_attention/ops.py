@@ -1,0 +1,20 @@
+"""Jitted public wrapper: picks the Pallas kernel on TPU, interpret-mode
+kernel for validation, or the jnp reference elsewhere."""
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "impl"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, impl: str = "auto"):
+    """impl: auto | pallas | interpret | ref."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return flash_attention_ref(q, k, v, causal=causal)
+    return flash_attention_fwd(q, k, v, bq=bq, bk=bk, causal=causal,
+                               interpret=(impl == "interpret"))

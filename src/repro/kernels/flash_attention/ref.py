@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash attention."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, sm_scale=None):
+    """q: (B, Hq, S, hd); k, v: (B, KVH, S, hd)."""
+    B, Hq, S, hd = q.shape
+    KVH = k.shape[1]
+    G = Hq // KVH
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(hd)
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

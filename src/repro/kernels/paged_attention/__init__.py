@@ -1,0 +1,4 @@
+from repro.kernels.paged_attention.ops import (  # noqa: F401
+    paged_attention,
+    write_token_to_pages,
+)

@@ -1,0 +1,33 @@
+"""Jitted wrapper + page-pool utilities used by the serving engine."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention as _kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                    impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens)
+    return _kernel(q, k_pages, v_pages, block_tables, seq_lens,
+                   interpret=(impl == "interpret"))
+
+
+def write_token_to_pages(k_pages, v_pages, block_tables, positions, k_new, v_new):
+    """Scatter one token per sequence into its page pool.
+
+    k_new/v_new: (B, KVH, hd); positions: (B,) absolute token index.
+    """
+    page_size = k_pages.shape[1]
+    page_idx = block_tables[jnp.arange(block_tables.shape[0]),
+                            positions // page_size]
+    slot = positions % page_size
+    k_pages = k_pages.at[page_idx, slot].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[page_idx, slot].set(v_new.astype(v_pages.dtype))
+    return k_pages, v_pages

@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, record memory/cost/collective analysis for the roofline.
+
+MUST be run as its own process (the two lines above lock jax's device count
+before any other import).  ``--all`` subprocesses one cell at a time.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+ARCHS = [
+    "qwen2-vl-7b", "mixtral-8x22b", "dbrx-132b", "stablelm-12b",
+    "tinyllama-1.1b", "qwen1.5-32b", "qwen2-72b", "zamba2-2.7b",
+    "xlstm-125m", "seamless-m4t-medium",
+]
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    from repro.configs import SHAPES, get_config
+    from repro.models.model import build_model
+
+    cfg = get_config(arch)
+    return build_model(cfg).batch_specs(SHAPES[shape_name])
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             overrides: dict | None = None) -> dict:
+    import jax
+
+    from repro.configs import SHAPES, applicable_shapes, get_config
+    from repro.launch.hlo_analysis import analyze_hlo_text
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**{k: v for k, v in overrides.items()
+                             if k in cfg.__dataclass_fields__})
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "skipped": "pure full-attention arch (DESIGN.md §4)"}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    vocab_chunk = (overrides or {}).get("vocab_chunk", 0)
+    fn, arg_structs, in_sh, out_sh, donate = build_cell(
+        cfg, shape, mesh, vocab_chunk=vocab_chunk)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*arg_structs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        print(mem)  # proves it fits
+        ca = compiled.cost_analysis()
+        print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+    hlo = analyze_hlo_text(compiled.as_text())
+
+    n_chips = 1
+    for s in mesh.shape.values():
+        n_chips *= s
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "mesh": mesh_kind,
+        "chips": n_chips,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "xla_cost_analysis": {
+            "flops": ca.get("flops"),
+            "bytes_accessed": ca.get("bytes accessed"),
+            "note": "per-device, while-bodies counted once (see hlo_analysis)",
+        },
+        "hlo_per_device": hlo,  # trip-count-corrected, per device
+        "overrides": overrides or {},
+    }
+    # analytic model flops (roofline numerator)
+    n_active = cfg.active_param_count()
+    n_total = cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        rec["model_flops"] = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        rec["model_flops"] = 2.0 * n_active * tokens
+    else:
+        rec["model_flops"] = 2.0 * n_active * shape.global_batch
+    rec["params_total"] = n_total
+    rec["params_active"] = n_active
+    return rec
+
+
+def cell_list(mesh_arg: str):
+    from repro.configs import SHAPES, applicable_shapes, get_config
+
+    meshes = ["single", "multi"] if mesh_arg == "both" else [mesh_arg]
+    cells = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if shape.name == "long_500k" and not cfg.supports_long_context:
+                cells.append((arch, shape.name, None))  # record skip once
+                continue
+            for m in meshes:
+                cells.append((arch, shape.name, m))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (perf experiments)")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        failures = []
+        for arch, shape, m in cell_list(args.mesh):
+            mesh_name = m or "skip"
+            out = OUT_DIR / f"{args.tag}__{arch}__{shape}__{mesh_name}.json"
+            if out.exists() and not args.force:
+                continue
+            if m is None:
+                out.write_text(json.dumps({
+                    "arch": arch, "shape": shape, "mesh": "skip",
+                    "skipped": "pure full-attention arch (DESIGN.md §4)"},
+                    indent=1))
+                print(f"[skip] {arch} {shape}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", m,
+                   "--tag", args.tag] + sum([["--set", s] for s in args.set], [])
+            print(f"[cell] {arch} {shape} {m} ...", flush=True)
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=3600)
+            if r.returncode != 0:
+                failures.append((arch, shape, m))
+                print(f"[FAIL] {arch} {shape} {m}\n{r.stdout[-2000:]}\n{r.stderr[-4000:]}")
+            else:
+                print(r.stdout.strip().splitlines()[-1] if r.stdout.strip() else "ok")
+        print(f"done; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+    rec = run_cell(args.arch, args.shape, args.mesh, overrides or None)
+    out = OUT_DIR / f"{args.tag}__{args.arch}__{args.shape}__{args.mesh}.json"
+    out.write_text(json.dumps(rec, indent=1))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

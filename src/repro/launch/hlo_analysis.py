@@ -1,0 +1,368 @@
+"""Post-compile HLO text analyzer.
+
+``compiled.cost_analysis()`` on this JAX version counts while-loop bodies
+ONCE and reports post-SPMD per-device shapes, which grossly undercounts
+scanned-layer models.  This module re-derives roofline inputs from
+``compiled.as_text()`` directly:
+
+  - matmul FLOPs from ``dot`` ops (2 * prod(out) * prod(contracting)),
+  - approximate HBM bytes from top-level instruction operands/outputs
+    (fusion bodies excluded; dynamic-update-slice counted as 2x update,
+    in-place),
+  - collective bytes per op type from operand shapes,
+
+with while-loop bodies multiplied by ``known_trip_count`` from the XLA
+backend_config.  All numbers are per-device (the HLO is one SPMD program).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_ZERO_COST_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "reshape", "iota",
+    "rng-get-and-update-state", "conditional", "while", "call", "custom-call",
+    "broadcast",
+}
+
+# On TPU, XLA fuses elementwise chains into neighbouring fusions; the CPU
+# backend leaves many at top level.  These are tallied separately
+# ("elementwise_bytes") and excluded from the fusion-adjusted memory term.
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "select", "compare", "maximum",
+    "minimum", "exponential", "exponential-minus-one", "tanh", "rsqrt",
+    "sqrt", "negate", "abs", "and", "or", "xor", "not", "power", "log",
+    "log-plus-one", "logistic", "clamp", "sign", "cosine", "sine", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "reduce-precision",
+    "is-finite", "atan2", "remainder", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "add-dependency", "stochastic-convert", "map",
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class Instruction:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    raw: str
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type str
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^()]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\((.*)$"
+)
+
+_COMP_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+
+
+def parse_hlo(txt: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in txt.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and ("->" in line):
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        # operand names: %tokens inside the first paren group (best-effort:
+        # operands never contain '(' except conditionals' computations)
+        depth, i = 1, 0
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        opnd_str, attrs = rest[: i - 1], rest[i:]
+        operands = re.findall(r"%([\w\.\-]+)", opnd_str)
+        instr = Instruction(name, type_str, opcode, operands, line,
+                            is_root=line.lstrip().startswith("ROOT"))
+        cur.instructions.append(instr)
+        cur.symbols[name] = type_str
+    return comps, entry
+
+
+def _trip_count(raw: str) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"', raw)
+    return int(m.group(1)) if m else 1
+
+
+def _called_comps(instr: Instruction) -> List[Tuple[str, int]]:
+    """(computation, multiplier) pairs called by this instruction."""
+    raw = instr.raw
+    out = []
+    if instr.opcode == "while":
+        t = _trip_count(raw)
+        for key in ("condition", "body"):
+            m = re.search(key + r"=%?([\w\.\-]+)", raw)
+            if m:
+                out.append((m.group(1), t))
+    elif instr.opcode == "fusion":
+        m = re.search(r"calls=%?([\w\.\-]+)", raw)
+        if m:
+            out.append((m.group(1), 1))
+    elif instr.opcode == "call":
+        m = re.search(r"to_apply=%?([\w\.\-]+)", raw)
+        if m:
+            out.append((m.group(1), 1))
+    elif instr.opcode == "conditional":
+        m = re.search(r"branch_computations=\{([^}]*)\}", raw)
+        if m:
+            for c in re.findall(r"%?([\w\.\-]+)", m.group(1)):
+                out.append((c, 1))
+        for key in ("true_computation", "false_computation"):
+            m = re.search(key + r"=%?([\w\.\-]+)", raw)
+            if m:
+                out.append((m.group(1), 1))
+    return out
+
+
+def _dot_flops(instr: Instruction, comp: Computation) -> float:
+    out_dims = _shape_dims(instr.type_str)
+    lhs_type = comp.symbols.get(instr.operands[0], "") if instr.operands else ""
+    lhs_dims = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.raw)
+    contract = 1
+    if m and m.group(1) and lhs_dims:
+        for d in m.group(1).split(","):
+            contract *= lhs_dims[int(d)]
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    return 2.0 * n_out * contract
+
+
+_LAYOUT_OPS = {
+    "parameter", "convert", "bitcast", "copy", "transpose", "reshape",
+    "broadcast", "constant", "iota", "tuple", "get-tuple-element",
+}
+
+
+def _fusion_root(body: Computation) -> Optional[Instruction]:
+    root = next((i for i in body.instructions if i.is_root), None)
+    if root is None and body.instructions:
+        root = body.instructions[-1]
+    return root
+
+
+def _root_write_chain(body: Computation, root: Instruction):
+    """Names on the in-place target chain (root target through converts)."""
+    chain = set()
+    cur = root.operands[0] if root.operands else None
+    for _ in range(8):
+        if cur is None:
+            break
+        chain.add(cur)
+        nxt = next((i for i in body.instructions
+                    if i.name == cur and i.opcode in ("convert", "bitcast", "copy")),
+                   None)
+        cur = nxt.operands[0] if nxt and nxt.operands else None
+    return chain
+
+
+def _fusion_bytes(instr: Instruction, comp: Computation,
+                  comps: Dict[str, "Computation"]) -> Tuple[float, float]:
+    """(hbm_bytes, layout_bytes) of a fusion call.
+
+    - scatter/DUS-rooted fusion: in-place -> 2x update + indices only
+      (the CPU backend wraps bf16 scatters in f32 convert sandwiches; on the
+      TPU target these are native).
+    - pure layout/convert fusion: counted separately (CPU legalization /
+      layout copies; excluded from the default memory term but reported).
+    - else: params at slice granularity when only sliced, plus output.
+    """
+    m = re.search(r"calls=%?([\w\.\-]+)", instr.raw)
+    body = comps.get(m.group(1)) if m else None
+    if body is None:
+        return (float(_type_bytes(instr.type_str)) + sum(
+            _type_bytes(comp.symbols.get(o, "")) for o in instr.operands), 0.0)
+    root = _fusion_root(body)
+    if root is not None and root.opcode in ("dynamic-update-slice", "scatter"):
+        upd_ix = 1 if root.opcode == "dynamic-update-slice" else 2
+        upd = body.symbols.get(root.operands[upd_ix], "") if len(root.operands) > upd_ix else ""
+        idx = body.symbols.get(root.operands[upd_ix - 1], "") if root.opcode == "scatter" else ""
+        return (2.0 * _type_bytes(upd) + _type_bytes(idx), 0.0)
+    ops = {i.opcode for i in body.instructions}
+    if ops <= _LAYOUT_OPS:
+        total = float(_type_bytes(instr.type_str))
+        for p in (i for i in body.instructions if i.opcode == "parameter"):
+            total += _type_bytes(p.type_str)
+        return (0.0, total)
+    params = [i for i in body.instructions if i.opcode == "parameter"]
+    total = 0.0
+    for p in params:
+        # effective consumers: walk through dtype/layout-only chains
+        frontier, consumers, seen = [p.name], [], set()
+        while frontier:
+            nm = frontier.pop()
+            for c in body.instructions:
+                if nm in c.operands and c.name not in seen:
+                    seen.add(c.name)
+                    if c.opcode in ("convert", "bitcast", "copy", "reshape"):
+                        frontier.append(c.name)
+                    else:
+                        consumers.append(c)
+        if consumers and all(c.opcode in ("dynamic-slice", "slice")
+                             for c in consumers):
+            total += sum(_type_bytes(c.type_str) for c in consumers)
+        else:
+            total += _type_bytes(p.type_str)
+    total += _type_bytes(instr.type_str)
+    return (max(total, 0.0), 0.0)
+
+
+def _instr_bytes(instr: Instruction, comp: Computation,
+                 comps: Optional[Dict[str, "Computation"]] = None
+                 ) -> Tuple[float, float, float]:
+    """(hbm_bytes, layout_bytes, elementwise_bytes)."""
+    op = instr.opcode
+    if op in _ZERO_COST_OPS:
+        return 0.0, 0.0, 0.0
+    if op == "fusion" and comps is not None:
+        hb, lb = _fusion_bytes(instr, comp, comps)
+        return hb, lb, 0.0
+    if op == "dynamic-update-slice":
+        # in-place: read + write the update slice only
+        upd = comp.symbols.get(instr.operands[1], "") if len(instr.operands) > 1 else ""
+        return 2.0 * _type_bytes(upd), 0.0, 0.0
+    if op == "scatter":
+        upd = comp.symbols.get(instr.operands[2], "") if len(instr.operands) > 2 else ""
+        idx = comp.symbols.get(instr.operands[1], "") if len(instr.operands) > 1 else ""
+        return 2.0 * _type_bytes(upd) + _type_bytes(idx), 0.0, 0.0
+    if op == "dynamic-slice":
+        return 2.0 * _type_bytes(instr.type_str), 0.0, 0.0
+    if op in ("copy", "convert", "transpose"):
+        return 0.0, 2.0 * float(_type_bytes(instr.type_str)), 0.0
+    total = float(_type_bytes(instr.type_str))
+    for o in instr.operands:
+        t = comp.symbols.get(o)
+        if t:
+            total += _type_bytes(t)
+    if op in _ELEMENTWISE:
+        return 0.0, 0.0, total
+    return total, 0.0, 0.0
+
+
+class HloCost:
+    def __init__(self, txt: str):
+        self.comps, self.entry = parse_hlo(txt)
+        self._memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+
+    def _comp_cost(self, name: str, bytes_enabled: bool = True):
+        key = (name, bytes_enabled)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        if comp is None:
+            return (0.0, 0.0, 0.0, 0.0, {})
+        flops = 0.0
+        byts = 0.0
+        layout = 0.0
+        elem = 0.0
+        coll: Dict[str, float] = defaultdict(float)
+        for instr in comp.instructions:
+            if instr.opcode == "dot":
+                flops += _dot_flops(instr, comp)
+            if any(instr.opcode.startswith(c) for c in COLLECTIVES):
+                base = next(c for c in COLLECTIVES if instr.opcode.startswith(c))
+                b = 0.0
+                for o in instr.operands:
+                    t = comp.symbols.get(o)
+                    if t:
+                        b += _type_bytes(t)
+                coll[base] += b
+            if bytes_enabled:
+                hb, lb, eb = _instr_bytes(instr, comp, self.comps)
+                byts += hb
+                layout += lb
+                elem += eb
+            for sub, mult in _called_comps(instr):
+                # fusion bodies: flops/collectives only (HBM traffic counted
+                # at the fusion call site)
+                sub_bytes = bytes_enabled and instr.opcode != "fusion"
+                sf, sb, sl, se, sc = self._comp_cost(sub, sub_bytes)
+                flops += mult * sf
+                byts += mult * sb
+                layout += mult * sl
+                elem += mult * se
+                for k, v in sc.items():
+                    coll[k] += mult * v
+        self._memo[key] = (flops, byts, layout, elem, dict(coll))
+        return self._memo[key]
+
+    def totals(self) -> Dict[str, object]:
+        """Per-device totals (SPMD program)."""
+        if not self.entry:
+            return {"flops": 0.0, "bytes": 0.0, "collectives": {}}
+        f, b, l, e, c = self._comp_cost(self.entry)
+        return {
+            "flops": f,
+            "bytes": b,  # fusion-adjusted (TPU-like) HBM traffic
+            "layout_bytes": l,  # CPU legalization/layout copies
+            "elementwise_bytes": e,  # CPU-unfused elementwise (fused on TPU)
+            "collectives": c,
+            "collective_bytes": sum(c.values()),
+        }
+
+
+def analyze_hlo_text(txt: str) -> Dict[str, object]:
+    return HloCost(txt).totals()

@@ -1,0 +1,113 @@
+"""Roofline aggregation over the dry-run records (EXPERIMENTS.md §Roofline).
+
+    PYTHONPATH=src python -m repro.launch.roofline [--tag baseline] [--mesh single]
+
+Terms per (arch x shape), single-pod, from the compiled artifact:
+  compute    = flops_per_device / 197 TFLOP/s
+  memory     = hbm_bytes_per_device / 819 GB/s   (fusion-adjusted; layout and
+               CPU-legalization bytes reported separately)
+  collective = collective_bytes_per_device / 50 GB/s-link
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def load_records(tag: str = "baseline", mesh: str = "single"):
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob(f"{tag}__*__{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def terms(rec: dict) -> dict:
+    h = rec["hlo_per_device"]
+    t_c = h["flops"] / PEAK_FLOPS_BF16
+    t_m = h["bytes"] / HBM_BW
+    t_l = h["collective_bytes"] / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_l, "collective"))[1]
+    useful = rec["model_flops"] / max(h["flops"] * rec["chips"], 1.0)
+    bound = max(t_c, t_m, t_l)
+    roofline_frac = t_c / bound if bound > 0 else 0.0  # compute-term fraction
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_l,
+        "dominant": dom,
+        "useful_flops_ratio": useful,
+        "roofline_frac": roofline_frac,
+        "layout_s": h.get("layout_bytes", 0) / HBM_BW,
+        "temp_gb": rec["memory"]["temp_bytes"] / 1e9,
+        "arg_gb": rec["memory"]["argument_bytes"] / 1e9,
+    }
+
+
+MOVE_HINTS = {
+    "compute": "raise MFU: fuse attention, drop remat recompute, bigger "
+               "matmul tiles",
+    "memory": "cut HBM round-trips: fused (flash) attention, chunked CE, "
+              "int8 KV, fewer score materializations",
+    "collective": "reshard: reduce-scatter grads, overlap collectives with "
+                  "compute, EP dispatch for MoE",
+}
+
+
+def table(tag: str = "baseline", mesh: str = "single") -> str:
+    recs = load_records(tag, mesh)
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | useful/HLO | fix |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    rows = []
+    for rec in recs:
+        if "skipped" in rec:
+            lines.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | "
+                         f"skipped | — | {rec['skipped']} |")
+            continue
+        t = terms(rec)
+        rows.append(t)
+        lines.append(
+            f"| {t['arch']} | {t['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"{t['dominant']} | {t['useful_flops_ratio']:.3f} | "
+            f"{MOVE_HINTS[t['dominant']][:40]} |")
+    return "\n".join(lines), rows
+
+
+def pick_hillclimb_cells(rows):
+    """Three most interesting cells: worst roofline fraction, most
+    collective-bound, most representative of the paper (decode serving)."""
+    worst = min(rows, key=lambda t: t["roofline_frac"])
+    coll = max(rows, key=lambda t: t["collective_s"] /
+               max(t["compute_s"] + t["memory_s"], 1e-12))
+    serving = [t for t in rows if t["shape"] == "decode_32k"]
+    rep = max(serving, key=lambda t: t["memory_s"]) if serving else rows[0]
+    return {"worst_fraction": worst, "most_collective_bound": coll,
+            "paper_representative": rep}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    tbl, rows = table(args.tag, args.mesh)
+    print(tbl)
+    print()
+    picks = pick_hillclimb_cells(rows)
+    for why, t in picks.items():
+        print(f"hillclimb[{why}]: {t['arch']} x {t['shape']} "
+              f"(dominant={t['dominant']}, useful={t['useful_flops_ratio']:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Serving launcher: the paper's §7 evaluation on the 12-device cluster.
+
+    PYTHONPATH=src python -m repro.launch.serve --mode blockllm --apps 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="blockllm",
+                    choices=["blockllm", "pm", "ps"])
+    ap.add_argument("--apps", type=int, default=20)
+    ap.add_argument("--requests", type=int, default=400)
+    ap.add_argument("--duration", type=float, default=600.0)
+    ap.add_argument("--no-adaptive", action="store_true")
+    ap.add_argument("--no-speculation", action="store_true")
+    ap.add_argument("--kv-policy", default="owner",
+                    choices=["owner", "recalc", "least-busy"])
+    ap.add_argument("--placement", default="locality",
+                    choices=["locality", "fragmentation"])
+    args = ap.parse_args()
+
+    from repro.serving.request import generate_trace
+    from repro.serving.simulator import (
+        SchedulerConfig,
+        Simulation,
+        build_serving_config,
+    )
+
+    cfg = build_serving_config(n_foundations=3, n_apps=args.apps,
+                               mode=args.mode)
+    trace = generate_trace(list(cfg.chains), total_requests=args.requests,
+                           duration_s=args.duration, seed=0,
+                           prompt_len=(64, 512), gen_len=(64, 256))
+    sched = SchedulerConfig(
+        mode=args.mode, adaptive=not args.no_adaptive,
+        speculation=not args.no_speculation, kv_policy=args.kv_policy,
+        placement=args.placement)
+    metrics = Simulation(cfg, sched).run(trace)
+    print(json.dumps({k: (round(v, 4) if isinstance(v, float) else v)
+                      for k, v in metrics.items()}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

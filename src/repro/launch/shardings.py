@@ -1,0 +1,196 @@
+"""Assemble NamedShardings for every (arch x shape x mesh) dry-run cell.
+
+Param specs are rule-based on leaf names (we control every param name in
+repro.models); stacked leading dims get ``None`` prepended automatically.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, GetAttrKey, SequenceKey
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+M = "model"
+
+_REPLICATED_NAMES = {
+    "final_ln", "enc_final_ln", "ln", "ln1", "ln2", "ln_x", "ln_concat",
+    "ln_cell", "ln_out", "b_gates", "b_i", "b_f", "step",
+}
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        if isinstance(k, DictKey):
+            return str(k.key)
+        if isinstance(k, GetAttrKey):
+            return k.name
+    return ""
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _fit(core, shape, mesh: Mesh):
+    """Drop axes that do not divide the corresponding dim (jit in_shardings
+    require exact divisibility)."""
+    out = list(core)
+    for i, ax in enumerate(out):
+        if ax is not None and shape[i] % _axis_size(mesh, ax) != 0:
+            out[i] = None
+    return out
+
+
+def leaf_spec(name: str, shape, cfg: ModelConfig, mesh: Mesh, mode: str) -> P:
+    """Core spec by param name; leading stacked dims padded with None;
+    non-divisible axes dropped (with head->head_dim fallback for attention)."""
+    ndim = len(shape)
+    fsdp_modes = ("train", "decode") if cfg.decode_2d_params else ("train",)
+    f = "data" if (mode in fsdp_modes and "data" in mesh.axis_names) else None
+    msize = mesh.shape[M]
+    hd_mode = mode == "decode" and cfg.num_kv_heads % msize != 0
+
+    def finish(core):
+        pad = ndim - len(core)
+        if pad < 0:
+            core = core[-ndim:]
+            pad = 0
+        core = [None] * pad + list(core)
+        return P(*_fit(core, shape, mesh))
+
+    if name in _REPLICATED_NAMES or name.startswith("ln"):
+        return P(*([None] * ndim))
+
+    table = {
+        "embed": [M, f],
+        "lm_head": [f, M],
+        "w_gate": [f, M], "w_up": [f, M], "ffn_gate": [f, M], "ffn_up": [f, M],
+        "w_down": [M, f], "ffn_down": [M, f],
+        "router": [f, None],
+        "w_in": [f, M],
+        "conv_w": [None, M],
+        "conv_b": [M], "A_log": [M], "dt_bias": [M], "D_skip": [M],
+        "ln_gate": [M],
+        "w_out": [M, f],
+        "w_concat": [f, None],
+        "w_i": [f, None], "w_f": [f, None],
+        "w_gates": [f, None, None, M],
+        "r_gates": [None, None, M, None],
+    }
+    if cfg.moe_impl == "ep":
+        table.update({"e_gate": [M, f, None], "e_up": [M, f, None],
+                      "e_down": [M, None, f]})
+    else:
+        table.update({"e_gate": [None, f, M], "e_up": [None, f, M],
+                      "e_down": [None, M, f]})
+
+    qkv = {"wq", "wk", "wv", "xwq", "xwk", "xwv"}
+    if name in qkv:
+        if ndim >= 3:  # (..., D, H, hd)
+            heads = shape[-2]
+            if hd_mode or heads % msize != 0:
+                core = [f, None, M]  # head_dim-sharded fallback
+            else:
+                core = [f, M, None]
+        else:
+            core = [f, M]  # xlstm 2-D projections
+        return finish(core)
+    if name in ("wo", "xwo"):
+        heads = shape[-3] if ndim >= 3 else 0
+        if ndim >= 3 and (hd_mode or heads % msize != 0):
+            core = [None, M, f]
+        else:
+            core = [M, None, f]
+        return finish(core)
+    if name in ("bq", "bk", "bv"):
+        heads = shape[-2]
+        core = [None, M] if (hd_mode or heads % msize != 0) else [M, None]
+        return finish(core)
+    if name in table:
+        return finish(table[name])
+    # default: replicate
+    return P(*([None] * ndim))
+
+
+def param_specs(params_shapes, cfg: ModelConfig, mesh: Mesh, mode: str):
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        return leaf_spec(name, leaf.shape, cfg, mesh, mode)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shapes)
+
+
+def _dp(mesh: Mesh, B: int):
+    """Joint DP axes over which B divides; falls back data-only, then None."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if B % size == 0:
+        return axes if len(axes) > 1 else axes[0]
+    if "data" in mesh.axis_names and B % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def batch_specs(batch_shapes, cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    B = shape.global_batch
+
+    def spec(path, leaf):
+        db = _dp(mesh, leaf.shape[0]) if leaf.ndim >= 1 else None
+        return P(*([db] + [None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shapes)
+
+
+def cache_specs_tree(cache_shapes, cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    """Decode-cache shardings (DESIGN.md §5): batch over data; kv_head over
+    model when divisible else head_dim over model; SSM/recurrent states shard
+    their largest model-divisible inner dim."""
+    msize = mesh.shape[M]
+    B = shape.global_batch
+    db = _dp(mesh, B)
+    kv_on_heads = cfg.num_kv_heads % msize == 0
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        nd = leaf.ndim
+        if name in ("k", "v", "xk", "xv"):
+            # (L, B, S, KVH, hd)
+            if kv_on_heads:
+                return P(None, db, None, M, None)
+            return P(None, db, None, None, M)
+        if name in ("k_scale", "v_scale"):
+            if kv_on_heads:
+                return P(None, db, None, M, None)
+            return P(None, db, None, None, None)
+        if name == "conv":  # (n_super, every, B, W-1, C)
+            return P(None, None, db, None, M)
+        if name == "ssm":  # (n_super, every, B, H, P, N)
+            return P(None, None, db, M, None, None)
+        # xlstm recurrent states: tuples -> no dict names; shard batch +
+        # first inner dim divisible by model axis
+        spec_list = [db] + [None] * (nd - 1)
+        for i in range(2, nd):  # skip batch and head dims
+            if leaf.shape[i] % msize == 0 and leaf.shape[i] >= msize:
+                spec_list[i] = M
+                break
+        return P(*spec_list)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def named_tree(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

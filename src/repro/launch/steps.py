@@ -1,0 +1,96 @@
+"""Build the jit-able step function + shardings for one (arch, shape, mesh)
+cell.  Used by the dry-run (lower/compile against ShapeDtypeStructs) and by
+the real launchers (train.py / serve.py) at small scale."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import shardings as SH
+from repro.models.model import Model, build_model
+from repro.models.sharding import ShardingCtx
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _ctx(mesh: Mesh, mode: str, cfg: ModelConfig, B: int) -> ShardingCtx:
+    ctx = ShardingCtx(mesh, mode, cfg)
+    ctx.dp = SH._dp(mesh, B)
+    return ctx
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               vocab_chunk: int = 0, remat: bool = True):
+    """Returns (fn, arg_structs, in_shardings, out_shardings, donate_argnums)."""
+    model = build_model(cfg)
+    B = shape.global_batch
+    batch_struct = model.batch_specs(shape)
+    batch_spec = SH.batch_specs(batch_struct, cfg, mesh, shape)
+
+    if shape.kind == "train":
+        shd = _ctx(mesh, "train", cfg, B)
+        params_struct = model.param_shapes()
+        opt_struct = jax.eval_shape(adamw_init, params_struct)
+        p_spec = SH.param_specs(params_struct, cfg, mesh, "train")
+        opt_spec = {"step": P(), "m": p_spec, "v": p_spec}
+        opt_cfg = AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: model.train_loss(p, batch, shd=shd,
+                                           vocab_chunk=vocab_chunk))(params)
+            params, opt_state, gnorm = adamw_update(grads, opt_state, params, opt_cfg)
+            return params, opt_state, loss
+
+        in_sh = (_ns(mesh, p_spec), _ns(mesh, opt_spec), _ns(mesh, batch_spec))
+        out_sh = (_ns(mesh, p_spec), _ns(mesh, opt_spec), NamedSharding(mesh, P()))
+        return train_step, (params_struct, opt_struct, batch_struct), in_sh, out_sh, (0, 1)
+
+    def _serve_params(struct):
+        if cfg.serve_param_dtype == "bf16":
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+                struct)
+        return struct
+
+    if shape.kind == "prefill":
+        shd = _ctx(mesh, "prefill", cfg, B)
+        params_struct = _serve_params(model.param_shapes())
+        p_spec = SH.param_specs(params_struct, cfg, mesh, "prefill")
+
+        def prefill(params, batch):
+            return model.prefill(params, batch, shd=shd)
+
+        out_struct = jax.eval_shape(prefill, params_struct, batch_struct)
+        logits_s, cache_s, kvlen_s = out_struct
+        db = SH._dp(mesh, B)
+        v_ax = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+        cache_spec = SH.cache_specs_tree(cache_s, cfg, mesh, shape)
+        out_spec = (P(db, v_ax), cache_spec, P(db))
+        in_sh = (_ns(mesh, p_spec), _ns(mesh, batch_spec))
+        return prefill, (params_struct, batch_struct), in_sh, _ns(mesh, out_spec), ()
+
+    # decode
+    shd = _ctx(mesh, "decode", cfg, B)
+    params_struct = _serve_params(model.param_shapes())
+    p_spec = SH.param_specs(params_struct, cfg, mesh, "decode")
+    cache_struct = model.cache_specs(shape)
+    cache_spec = SH.cache_specs_tree(cache_struct, cfg, mesh, shape)
+    db = SH._dp(mesh, B)
+
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch, shd=shd)
+
+    v_ax = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+    in_sh = (_ns(mesh, p_spec), _ns(mesh, cache_spec), _ns(mesh, batch_spec))
+    out_sh = (NamedSharding(mesh, P(db, v_ax)), _ns(mesh, cache_spec))
+    return decode_step, (params_struct, cache_struct, batch_struct), in_sh, out_sh, (1,)

@@ -1,0 +1,43 @@
+"""Training launcher.
+
+CPU-scale real run:   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b --reduced --steps 50
+Production lowering:  use repro.launch.dryrun (own process; forces 512 devices).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="blockllm-demo")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test-sized config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compress", default="none",
+                    choices=["none", "bf16", "int8"])
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_reduced_config
+    from repro.data.pipeline import DataConfig
+    from repro.training.train_loop import TrainConfig, train
+
+    cfg = (get_reduced_config if args.reduced else get_config)(args.arch)
+    out = train(
+        cfg,
+        TrainConfig(steps=args.steps, microbatches=args.microbatches,
+                    grad_compress=args.grad_compress,
+                    ckpt_dir=args.ckpt or None),
+        DataConfig(vocab_size=cfg.vocab_size, global_batch=args.batch,
+                   seq_len=args.seq),
+    )
+    print(f"{cfg.name}: loss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}"
+          f" over {len(out['losses'])} steps")
+
+
+if __name__ == "__main__":
+    main()

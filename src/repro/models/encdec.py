@@ -1,0 +1,268 @@
+"""Encoder-decoder transformer backbone (seamless-m4t-medium).
+
+The speech frontend is a STUB per the assignment: ``frames`` arrive as
+precomputed (B, S_src, d_model) embeddings.  Encoder is bidirectional;
+decoder has causal self-attention + cross-attention.  Cross-attention KV is
+computed once at prefill and owned/coordinated like self-attention KV in the
+serving layer.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding import constrain
+from repro.models.transformer import cross_entropy
+
+
+def _attn_proj_init(cfg, rng):
+    hd = cfg.resolved_head_dim
+    D, H = cfg.d_model, cfg.num_heads
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": L.dense_init(ks[0], (D, H, hd)),
+        "wk": L.dense_init(ks[1], (D, H, hd)),
+        "wv": L.dense_init(ks[2], (D, H, hd)),
+        "wo": L.dense_init(ks[3], (H, hd, D), in_axis_size=H * hd),
+    }
+
+
+def init_enc_layer(cfg: ModelConfig, rng) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 4)
+    p = {"ln1": jnp.ones((D,), jnp.float32), "ln2": jnp.ones((D,), jnp.float32)}
+    p.update(_attn_proj_init(cfg, ks[0]))
+    p.update({
+        "w_gate": L.dense_init(ks[1], (D, F)),
+        "w_up": L.dense_init(ks[2], (D, F)),
+        "w_down": L.dense_init(ks[3], (F, D), in_axis_size=F),
+    })
+    return p
+
+
+def init_dec_layer(cfg: ModelConfig, rng) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 5)
+    p = {
+        "ln1": jnp.ones((D,), jnp.float32),
+        "ln_x": jnp.ones((D,), jnp.float32),
+        "ln2": jnp.ones((D,), jnp.float32),
+    }
+    p.update(_attn_proj_init(cfg, ks[0]))
+    x = _attn_proj_init(cfg, ks[1])
+    p.update({"x" + k: v for k, v in x.items()})
+    p.update({
+        "w_gate": L.dense_init(ks[2], (D, F)),
+        "w_up": L.dense_init(ks[3], (D, F)),
+        "w_down": L.dense_init(ks[4], (F, D), in_axis_size=F),
+    })
+    return p
+
+
+def init_encdec(cfg: ModelConfig, rng) -> dict:
+    k_e, k_enc, k_dec, k_h = jax.random.split(rng, 4)
+    enc = jax.vmap(lambda r: init_enc_layer(cfg, r))(
+        jax.random.split(k_enc, cfg.encoder_layers))
+    dec = jax.vmap(lambda r: init_dec_layer(cfg, r))(
+        jax.random.split(k_dec, cfg.decoder_layers))
+    return {
+        "embed": L.dense_init(k_e, (cfg.vocab_size, cfg.d_model),
+                              in_axis_size=cfg.d_model),
+        "encoder": enc,
+        "decoder": dec,
+        "enc_final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": L.dense_init(k_h, (cfg.d_model, cfg.vocab_size)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# attention helpers
+# ---------------------------------------------------------------------------
+
+
+def _proj_qkv(x, p, prefix, shd):
+    q = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p[prefix + "wv"].astype(x.dtype))
+    return constrain(shd, "heads", q), k, v
+
+
+def bidir_attention(q, k, v, chunk: int):
+    """Non-causal full attention, query-chunked.  q: (B,Sq,H,hd)."""
+    B, S, H, hd = q.shape
+    chunk = min(chunk, S)
+    Sp = ((S + chunk - 1) // chunk) * chunk
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    n = Sp // chunk
+
+    def body(_, qc):
+        s = jnp.einsum("bchd,bshd->bhcs", qc, k,
+                       preferred_element_type=jnp.float32) / math.sqrt(hd)
+        pr = jax.nn.softmax(s, axis=-1)
+        return (), jnp.einsum("bhcs,bshd->bchd", pr.astype(v.dtype), v)
+
+    qs = q.reshape(B, n, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    _, outs = jax.lax.scan(body, (), qs)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, hd)[:, :S]
+
+
+def _mlp(x, p, cfg, shd):
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", h, p["w_gate"].astype(h.dtype)))
+    u = jnp.einsum("bsd,df->bsf", h, p["w_up"].astype(h.dtype))
+    o = jnp.einsum("bsf,fd->bsd", constrain(shd, "ffn", g * u),
+                   p["w_down"].astype(h.dtype))
+    return constrain(shd, "residual", x + o)
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params, cfg: ModelConfig, frames, shd=None):
+    """frames: (B, S_src, D) precomputed embeddings (stub frontend)."""
+    h = constrain(shd, "residual", frames.astype(L.COMPUTE_DTYPE))
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, p):
+        def blk(x_, p_):
+            hh = L.rms_norm(x_, p_["ln1"], cfg.norm_eps)
+            q, k, v = _proj_qkv(hh, p_, "", shd)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            o = bidir_attention(q, k, v, cfg.attn_chunk)
+            o = jnp.einsum("bshk,hkd->bsd", o, p_["wo"].astype(x_.dtype))
+            x_ = constrain(shd, "residual", x_ + o)
+            return _mlp(x_, p_, cfg, shd)
+
+        return jax.checkpoint(blk)(x, p), ()
+
+    h, _ = jax.lax.scan(body, h, params["encoder"])
+    return L.rms_norm(h, params["enc_final_ln"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# decoder
+# ---------------------------------------------------------------------------
+
+
+def _dec_layer_full(x, p, cfg, positions, enc_out, shd, return_kv=False):
+    # self-attention (causal)
+    hh = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _proj_qkv(hh, p, "", shd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = L.causal_attention(q, k, v, chunk=cfg.attn_chunk, shd=shd)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    x = constrain(shd, "residual", x + o)
+    # cross-attention
+    hh = L.rms_norm(x, p["ln_x"], cfg.norm_eps)
+    xq = jnp.einsum("bsd,dhk->bshk", hh, p["xwq"].astype(hh.dtype))
+    xk = jnp.einsum("bsd,dhk->bshk", enc_out, p["xwk"].astype(hh.dtype))
+    xv = jnp.einsum("bsd,dhk->bshk", enc_out, p["xwv"].astype(hh.dtype))
+    o = bidir_attention(xq, xk, xv, cfg.attn_chunk)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["xwo"].astype(hh.dtype))
+    x = constrain(shd, "residual", x + o)
+    x = _mlp(x, p, cfg, shd)
+    if return_kv:
+        return x, (k, v, xk, xv)
+    return x
+
+
+def encdec_train_loss(params, cfg: ModelConfig, batch, shd=None, vocab_chunk: int = 0):
+    enc_out = encode(params, cfg, batch["frames"], shd)
+    B, S = batch["tokens"].shape
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(L.COMPUTE_DTYPE)
+    h = constrain(shd, "residual", h)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, p):
+        return jax.checkpoint(
+            lambda x_, p_: _dec_layer_full(x_, p_, cfg, positions, enc_out, shd)
+        )(x, p), ()
+
+    h, _ = jax.lax.scan(body, h, params["decoder"])
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    return cross_entropy(h, params["lm_head"], batch["labels"], shd, vocab_chunk)
+
+
+def encdec_prefill(params, cfg: ModelConfig, batch, shd=None, max_len=None):
+    """Encode frames + prefill decoder over target prefix.
+
+    Cache = self-attn KV (ring-free) + cross-attn KV (computed once).
+    """
+    enc_out = encode(params, cfg, batch["frames"], shd)
+    B, S = batch["tokens"].shape
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(L.COMPUTE_DTYPE)
+    h = constrain(shd, "residual", h)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    prompt_lens = batch.get("prompt_lens", jnp.full((B,), S, jnp.int32))
+
+    def body(x, p):
+        x, (k, v, xk, xv) = _dec_layer_full(x, p, cfg, positions, enc_out, shd,
+                                            return_kv=True)
+        c = L.finalize_prefill_cache(k, v, cfg, max_len)
+        c["xk"] = xk.astype(L.COMPUTE_DTYPE)
+        c["xv"] = xv.astype(L.COMPUTE_DTYPE)
+        return x, c
+
+    h, cache = jax.lax.scan(body, h, params["decoder"])
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    idx = jnp.clip(prompt_lens - 1, 0, S - 1)
+    h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+    logits = jnp.einsum("bd,dv->bv", h_last, params["lm_head"].astype(h.dtype))
+    return constrain(shd, "logits", logits), cache, prompt_lens
+
+
+def encdec_decode_step(params, cfg: ModelConfig, cache, batch, shd=None):
+    """batch: tokens (B,1), kv_len (B,), src_len (B,)."""
+    B = batch["tokens"].shape[0]
+    kv_len = batch["kv_len"]
+    src_len = batch.get("src_len")
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(L.COMPUTE_DTYPE)
+    positions = kv_len[:, None]
+
+    self_cache = {"k": cache["k"], "v": cache["v"]}  # carried, in-place
+    cross = {"xk": cache["xk"], "xv": cache["xv"]}  # read-only
+
+    def body(carry, xs):
+        x, sc = carry
+        p, xk, xv, i = xs
+        hh = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _proj_qkv(hh, p, "", shd)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        sc = L.cache_insert_layer(sc, i, k, v, kv_len, cfg)
+        kc, vc = L.cache_layer_arrays(sc, i, cfg)
+        S = kc.shape[1]
+        valid = jnp.minimum(kv_len + 1, S)
+        o = L.decode_attention(q, kc, vc, valid, kv_chunk=cfg.decode_kv_chunk)
+        o = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"].astype(x.dtype))
+        x = x + o
+        hh = L.rms_norm(x, p["ln_x"], cfg.norm_eps)
+        xq = jnp.einsum("bsd,dhk->bshk", hh, p["xwq"].astype(hh.dtype))
+        S_src = xk.shape[1]
+        vs = src_len if src_len is not None else jnp.full((B,), S_src, jnp.int32)
+        o = L.decode_attention(xq, xk, xv, vs)
+        o = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["xwo"].astype(x.dtype))
+        x = x + o
+        x = _mlp(x, p, cfg, shd)
+        return (x, sc), ()
+
+    (h, self_cache), _ = jax.lax.scan(
+        body, (h, self_cache),
+        (params["decoder"], cross["xk"], cross["xv"],
+         jnp.arange(cfg.decoder_layers)))
+    new_cache = {"k": self_cache["k"], "v": self_cache["v"],
+                 "xk": cross["xk"], "xv": cross["xv"]}
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], params["lm_head"].astype(h.dtype))
+    return constrain(shd, "logits", logits), new_cache

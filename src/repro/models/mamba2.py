@@ -1,0 +1,311 @@
+"""Mamba2 (SSD) layers + Zamba2 hybrid (shared attention block re-applied).
+
+SSD uses the chunked formulation: quadratic-within-chunk matmuls (MXU
+friendly) + an inter-chunk recurrence carried by ``lax.scan``.  The Zamba2
+shared transformer block is a single set of weights applied every
+``shared_attn_every`` mamba layers — each application has its own KV cache
+(same weights, distinct instances: the arch-level analogue of BlockLLM block
+reuse).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding import constrain
+from repro.models.transformer import cross_entropy, init_dense_layer, _qkv
+
+# ---------------------------------------------------------------------------
+# dims
+# ---------------------------------------------------------------------------
+
+
+def mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_ch = d_inner + 2 * N
+    d_in_proj = 2 * d_inner + 2 * N + H  # z, xBC, dt
+    return d_inner, H, N, conv_ch, d_in_proj
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_layer(cfg: ModelConfig, rng) -> dict:
+    D = cfg.d_model
+    d_inner, H, N, conv_ch, d_in_proj = mamba_dims(cfg)
+    ks = jax.random.split(rng, 4)
+    return {
+        "ln": jnp.ones((D,), jnp.float32),
+        "w_in": L.dense_init(ks[0], (D, d_in_proj)),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch), jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(10 ** jax.random.uniform(ks[2], (H,), minval=-4.0, maxval=-1.0))),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "w_out": L.dense_init(ks[3], (d_inner, D), in_axis_size=d_inner),
+        "ln_gate": jnp.ones((d_inner,), jnp.float32),
+    }
+
+
+def init_zamba(cfg: ModelConfig, rng) -> dict:
+    assert cfg.num_layers % cfg.shared_attn_every == 0
+    n_super = cfg.num_layers // cfg.shared_attn_every
+    k_embed, k_m, k_shared, k_cat, k_head = jax.random.split(rng, 5)
+    m_rngs = jax.random.split(k_m, cfg.num_layers).reshape(
+        n_super, cfg.shared_attn_every, 2)
+    mamba = jax.vmap(jax.vmap(lambda r: init_mamba_layer(cfg, r)))(m_rngs)
+    shared = init_dense_layer(cfg, k_shared)
+    shared["w_concat"] = L.dense_init(k_cat, (2 * cfg.d_model, cfg.d_model),
+                                      in_axis_size=2 * cfg.d_model)
+    shared["ln_concat"] = jnp.ones((2 * cfg.d_model,), jnp.float32)
+    return {
+        "embed": L.dense_init(k_embed, (cfg.vocab_size, cfg.d_model),
+                              in_axis_size=cfg.d_model),
+        "mamba": mamba,            # stacked (n_super, every, ...)
+        "shared_attn": shared,     # single block, re-applied
+        "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": L.dense_init(k_head, (cfg.d_model, cfg.vocab_size)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD forward (full sequence, chunked)
+# ---------------------------------------------------------------------------
+
+
+def _conv1d_causal(xBC, w, b, state=None):
+    """Depthwise causal conv.  xBC: (B,S,C); w: (W,C).  state: (B,W-1,C)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (W - 1,) + xBC.shape[2:], xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)  # (B, S+W-1, C)
+    out = sum(xp[:, i : i + xBC.shape[1]] * w[i][None, None] for i in range(W))
+    return jax.nn.silu(out + b[None, None]), xp[:, -(W - 1):]
+
+
+def ssd_scan(x, Bmat, Cmat, dt, A, chunk: int, h0=None):
+    """Chunked SSD.  x: (B,S,H,P); Bmat/Cmat: (B,S,N); dt: (B,S,H); A: (H,) < 0.
+
+    Returns y: (B,S,H,P) and final state (B,H,P,N).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    Q = min(chunk, S)
+    Sp = ((S + Q - 1) // Q) * Q
+    if Sp != S:
+        # dt=0 padding: no state update, unit decay -> exact
+        x = jnp.pad(x, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, Sp - S), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, Sp - S), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, Sp - S), (0, 0)))
+    n = Sp // Q
+    xc = x.reshape(Bsz, n, Q, H, P).transpose(1, 0, 2, 3, 4)
+    Bc = Bmat.reshape(Bsz, n, Q, N).transpose(1, 0, 2, 3)
+    Cc = Cmat.reshape(Bsz, n, Q, N).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(Bsz, n, Q, H).transpose(1, 0, 2, 3)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    mask = np.tril(np.ones((Q, Q), np.bool_))
+
+    def body(h, xs):
+        xq, bq, cq, dq = xs  # (B,Q,H,P), (B,Q,N), (B,Q,N), (B,Q,H)
+        dA = dq.astype(jnp.float32) * A[None, None]  # (B,Q,H) negative
+        cum = jnp.cumsum(dA, axis=1)  # (B,Q,H)
+        # intra-chunk: scores(i,j,h) = (C_i . B_j) exp(cum_i - cum_j) dt_j
+        cb = jnp.einsum("bin,bjn->bij", cq.astype(jnp.float32), bq.astype(jnp.float32))
+        decay = jnp.exp(cum[:, :, None] - cum[:, None, :])  # (B,Q,Q,H) j<=i
+        w = cb[..., None] * decay * dq.astype(jnp.float32)[:, None]
+        w = jnp.where(mask[None, :, :, None], w, 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xq.astype(jnp.float32))
+        # inter-chunk: y_i += exp(cum_i) C_i . h
+        y_inter = jnp.einsum("bih,bin,bhpn->bihp", jnp.exp(cum), cq.astype(jnp.float32), h)
+        # state update
+        seg = jnp.exp(cum[:, -1:, :] - cum)  # (B,Q,H) decay to chunk end
+        dx = xq.astype(jnp.float32) * (dq.astype(jnp.float32) * seg)[..., None]
+        h_new = jnp.exp(cum[:, -1])[:, :, None, None] * h + jnp.einsum(
+            "bqhp,bqn->bhpn", dx, bq.astype(jnp.float32))
+        return h_new, (y_intra + y_inter)
+
+    h_final, ys = jax.lax.scan(body, h0, (xc, Bc, Cc, dtc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, Sp, H, P)[:, :S]
+    return y, h_final
+
+
+def mamba_forward(x, p, cfg: ModelConfig, shd, conv_state=None, ssm_state=None):
+    """Full-sequence (train/prefill) if states None, else single-step decode.
+
+    Returns (out, (new_conv_state, new_ssm_state)).
+    """
+    d_inner, H, N, conv_ch, _ = mamba_dims(cfg)
+    res = x
+    xh = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", xh, p["w_in"].astype(xh.dtype))
+    z, xBC, dt_raw = jnp.split(proj, [d_inner, d_inner + conv_ch], axis=-1)
+    xBC, new_conv = _conv1d_causal(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bmat, Cmat = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    Bsz, S = xs.shape[:2]
+    xs = xs.reshape(Bsz, S, H, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+
+    if ssm_state is None and S > 1:
+        y, h_final = ssd_scan(xs, Bmat, Cmat, dt, A, cfg.ssm_chunk)
+    else:
+        h0 = ssm_state if ssm_state is not None else jnp.zeros(
+            (Bsz, H, cfg.ssm_head_dim, N), jnp.float32)
+        # single-step recurrence
+        dA = jnp.exp(dt[:, 0] * A[None])  # (B,H)
+        dx = xs[:, 0].astype(jnp.float32) * dt[:, 0][..., None]  # (B,H,P)
+        h_final = dA[:, :, None, None] * h0 + jnp.einsum(
+            "bhp,bn->bhpn", dx, Bmat[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", Cmat[:, 0].astype(jnp.float32), h_final)[:, None]
+    y = y + xs.astype(jnp.float32) * p["D_skip"][None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = L.rms_norm(y.astype(x.dtype), p["ln_gate"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    out = constrain(shd, "residual", res + out)
+    return out, (new_conv, h_final)
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 shared attention block
+# ---------------------------------------------------------------------------
+
+
+def shared_attn_block(x, h0, p, cfg, positions, shd, cache=None, kv_len=None,
+                      layer_idx=None):
+    """Shared transformer block on concat(x, h0) (h0 = initial embeddings).
+
+    Full-seq when cache is None (returns fresh (k, v)); decode otherwise
+    (cache = stacked dict carried through the scan, layer_idx selects the
+    application slot — same weights, distinct KV instances).
+    """
+    cat = jnp.concatenate([x, h0], axis=-1)
+    cat = L.rms_norm(cat, p["ln_concat"], cfg.norm_eps)
+    h = jnp.einsum("bse,ed->bsd", cat, p["w_concat"].astype(cat.dtype))
+    hh = L.rms_norm(h, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(hh, p, cfg, shd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        o = L.causal_attention(q, k, v, chunk=cfg.attn_chunk,
+                               window=cfg.sliding_window, shd=shd)
+        new_cache = (k, v)
+    else:
+        c = L.cache_insert_layer(cache, layer_idx, k, v, kv_len, cfg)
+        kc, vc = L.cache_layer_arrays(c, layer_idx, cfg)
+        S = kc.shape[1]
+        valid = jnp.minimum(kv_len + 1, S)
+        o = L.decode_attention(q, kc, vc, valid, kv_chunk=cfg.decode_kv_chunk)
+        new_cache = c
+    o = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"].astype(x.dtype))
+    h = h + o
+    hh = L.rms_norm(h, p["ln2"], cfg.norm_eps)
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", hh, p["w_gate"].astype(hh.dtype)))
+    u = jnp.einsum("bsd,df->bsf", hh, p["w_up"].astype(hh.dtype))
+    ff = jnp.einsum("bsf,fd->bsd", constrain(shd, "ffn", g * u), p["w_down"].astype(hh.dtype))
+    out = constrain(shd, "residual", x + h + ff)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 entry points
+# ---------------------------------------------------------------------------
+
+
+def _zamba_trunk(params, cfg, h, positions, shd, collect_cache=False):
+    """Full-sequence trunk.  Returns (h, attn_caches, mamba_states)."""
+    h0 = h
+    shared = params["shared_attn"]
+
+    def super_body(x, mp):
+        x, kv = shared_attn_block(x, h0, shared, cfg, positions, shd)
+
+        def inner(xx, lp):
+            out, st = mamba_forward(xx, lp, cfg, shd)
+            return out, st
+
+        x, states = jax.lax.scan(
+            lambda xx, lp: jax.checkpoint(inner)(xx, lp), x, mp)
+        return x, (kv, states)
+
+    h, (kvs, states) = jax.lax.scan(super_body, h, params["mamba"])
+    return h, kvs, states
+
+
+def zamba_train_loss(params, cfg: ModelConfig, batch, shd=None, vocab_chunk: int = 0):
+    B, S = batch["tokens"].shape
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(L.COMPUTE_DTYPE)
+    h = constrain(shd, "residual", h)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    h, _, _ = _zamba_trunk(params, cfg, h, positions, shd)
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    return cross_entropy(h, params["lm_head"], batch["labels"], shd, vocab_chunk)
+
+
+def zamba_prefill(params, cfg: ModelConfig, batch, shd=None, max_len=None):
+    B, S = batch["tokens"].shape
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(L.COMPUTE_DTYPE)
+    h = constrain(shd, "residual", h)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    prompt_lens = batch.get("prompt_lens", jnp.full((B,), S, jnp.int32))
+    h, kvs, states = _zamba_trunk(params, cfg, h, positions, shd)
+    # window / pad the shared-attn caches (stacked (n_super, B, S, H, hd))
+    k, v = kvs
+    attn_cache = L.finalize_prefill_cache(k, v, cfg, max_len, seq_axis=2)
+    cache = {
+        "attn": attn_cache,
+        "conv": states[0],
+        "ssm": states[1],
+    }
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    idx = jnp.clip(prompt_lens - 1, 0, S - 1)
+    h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+    logits = jnp.einsum("bd,dv->bv", h_last, params["lm_head"].astype(h.dtype))
+    return constrain(shd, "logits", logits), cache, prompt_lens
+
+
+def zamba_decode_step(params, cfg: ModelConfig, cache, batch, shd=None):
+    B = batch["tokens"].shape[0]
+    kv_len = batch["kv_len"]
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(L.COMPUTE_DTYPE)
+    h0 = h
+    positions = kv_len[:, None]
+    shared = params["shared_attn"]
+
+    def super_body(carry, xs):
+        x, attn_cache = carry
+        mp, conv_c, ssm_c, i = xs
+        x, attn_cache = shared_attn_block(
+            x, h0, shared, cfg, positions, shd,
+            cache=attn_cache, kv_len=kv_len, layer_idx=i)
+
+        def inner(xx, st):
+            lp, cv, sm = st
+            out, (ncv, nsm) = mamba_forward(xx, lp, cfg, shd, conv_state=cv, ssm_state=sm)
+            return out, (ncv, nsm)
+
+        x, (ncv, nsm) = jax.lax.scan(inner, x, (mp, conv_c, ssm_c))
+        return (x, attn_cache), (ncv, nsm)
+
+    n_super = cfg.num_layers // cfg.shared_attn_every
+    (h, attn_c), (conv_c, ssm_c) = jax.lax.scan(
+        super_body, (h, cache["attn"]),
+        (params["mamba"], cache["conv"], cache["ssm"], jnp.arange(n_super)))
+    new_cache = {"attn": attn_c, "conv": conv_c, "ssm": ssm_c}
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], params["lm_head"].astype(h.dtype))
+    return constrain(shd, "logits", logits), new_cache

@@ -1,0 +1,192 @@
+"""Unified Model API over all families.
+
+``build_model(cfg)`` returns a ``Model`` with:
+  - init(rng) -> params
+  - train_loss(params, batch, shd=None, vocab_chunk=0) -> scalar
+  - prefill(params, batch, shd=None) -> (last_logits, cache, kv_len)
+  - decode_step(params, cache, batch, shd=None) -> (logits, cache)
+  - batch_specs(shape) / cache_specs(shape): ShapeDtypeStruct stand-ins for
+    the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, fns: Dict[str, Callable]):
+        self.cfg = cfg
+        self._fns = fns
+
+    def init(self, rng):
+        return self._fns["init"](self.cfg, rng)
+
+    def train_loss(self, params, batch, shd=None, vocab_chunk: int = 0):
+        return self._fns["train_loss"](params, self.cfg, batch, shd, vocab_chunk)
+
+    def prefill(self, params, batch, shd=None, max_len=None):
+        return self._fns["prefill"](params, self.cfg, batch, shd, max_len)
+
+    def decode_step(self, params, cache, batch, shd=None):
+        return self._fns["decode_step"](params, self.cfg, cache, batch, shd)
+
+    # ------------------------------------------------------------------
+    # Dry-run stand-ins (ShapeDtypeStruct; never allocates)
+    # ------------------------------------------------------------------
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda r: self.init(r), jax.random.PRNGKey(0))
+
+    def batch_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        f32, i32 = jnp.float32, jnp.int32
+        bf16 = L.COMPUTE_DTYPE
+        sd = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            batch = {"tokens": sd((B, S), i32), "labels": sd((B, S), i32)}
+            if cfg.num_visual_tokens:
+                batch["visual_embeds"] = sd((B, cfg.num_visual_tokens, cfg.d_model), bf16)
+                batch["mrope_positions"] = sd((B, S, 3), i32)
+            if cfg.family == "encdec":
+                batch["frames"] = sd((B, S, cfg.d_model), bf16)
+            return batch
+        if shape.kind == "prefill":
+            batch = {"tokens": sd((B, S), i32), "prompt_lens": sd((B,), i32)}
+            if cfg.num_visual_tokens:
+                batch["visual_embeds"] = sd((B, cfg.num_visual_tokens, cfg.d_model), bf16)
+                batch["mrope_positions"] = sd((B, S, 3), i32)
+            if cfg.family == "encdec":
+                batch["frames"] = sd((B, S, cfg.d_model), bf16)
+            return batch
+        # decode: one new token against a KV cache of length S
+        batch = {"tokens": sd((B, 1), i32), "kv_len": sd((B,), i32)}
+        if cfg.family == "encdec":
+            batch["src_len"] = sd((B,), i32)
+        return batch
+
+    def cache_specs(self, shape: ShapeConfig):
+        """ShapeDtypeStructs of the decode cache for this (arch, shape)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        to_struct = lambda t: jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+        if cfg.family in ("dense", "moe"):
+            return to_struct(jax.eval_shape(
+                lambda: _kv_cache_struct(cfg, cfg.num_layers, B, S)))
+        if cfg.family == "hybrid":
+            return to_struct(jax.eval_shape(lambda: _zamba_cache_struct(cfg, B, S)))
+        if cfg.family == "ssm":
+            return to_struct(jax.eval_shape(lambda: _xlstm_state_struct(cfg, B)))
+        if cfg.family == "encdec":
+            return to_struct(jax.eval_shape(lambda: _encdec_cache_struct(cfg, B, S)))
+        raise ValueError(cfg.family)
+
+
+def _kv_cache_struct(cfg, num_layers, B, S):
+    return L.init_kv_cache(cfg, num_layers, B, S, cfg.num_kv_heads)
+
+
+def _zamba_cache_struct(cfg, B, S):
+    from repro.models.mamba2 import mamba_dims
+
+    d_inner, H, N, conv_ch, _ = mamba_dims(cfg)
+    n_super = cfg.num_layers // cfg.shared_attn_every
+    W = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    hd = cfg.resolved_head_dim
+    return {
+        "attn": {
+            "k": jnp.zeros((n_super, B, W, cfg.num_kv_heads, hd), L.COMPUTE_DTYPE),
+            "v": jnp.zeros((n_super, B, W, cfg.num_kv_heads, hd), L.COMPUTE_DTYPE),
+        },
+        "conv": jnp.zeros(
+            (n_super, cfg.shared_attn_every, B, cfg.ssm_conv_width - 1, conv_ch),
+            L.COMPUTE_DTYPE),
+        "ssm": jnp.zeros(
+            (n_super, cfg.shared_attn_every, B, H, cfg.ssm_head_dim, N), jnp.float32),
+    }
+
+
+def _xlstm_state_struct(cfg, B):
+    from repro.models.xlstm import _dims
+
+    D, Di, H, dk, dh, Fs = _dims(cfg)
+    states = []
+    for i in range(cfg.num_layers):
+        if i % 2 == 0:
+            states.append((jnp.zeros((B, H, dk, dk), jnp.float32),
+                           jnp.zeros((B, H, dk), jnp.float32),
+                           jnp.zeros((B, H), jnp.float32)))
+        else:
+            states.append((jnp.zeros((B, H, dh), jnp.float32),
+                           jnp.zeros((B, H, dh), jnp.float32),
+                           jnp.zeros((B, H, dh), jnp.float32),
+                           jnp.zeros((B, H, dh), jnp.float32)))
+    return tuple(states)
+
+
+def _encdec_cache_struct(cfg, B, S):
+    hd = cfg.resolved_head_dim
+    Ld = cfg.decoder_layers
+    # cross-attn source length: frames are seq_len-long in the assigned shapes
+    return {
+        "k": jnp.zeros((Ld, B, S, cfg.num_heads, hd), L.COMPUTE_DTYPE),
+        "v": jnp.zeros((Ld, B, S, cfg.num_heads, hd), L.COMPUTE_DTYPE),
+        "xk": jnp.zeros((Ld, B, S, cfg.num_heads, hd), L.COMPUTE_DTYPE),
+        "xv": jnp.zeros((Ld, B, S, cfg.num_heads, hd), L.COMPUTE_DTYPE),
+    }
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "dense":
+        from repro.models import transformer as T
+
+        return Model(cfg, {
+            "init": lambda c, r: T.init_dense(c, r),
+            "train_loss": T.dense_train_loss,
+            "prefill": T.dense_prefill,
+            "decode_step": T.dense_decode_step,
+        })
+    if cfg.family == "moe":
+        from repro.models import moe as M
+
+        return Model(cfg, {
+            "init": lambda c, r: M.init_moe(c, r),
+            "train_loss": M.moe_train_loss,
+            "prefill": M.moe_prefill,
+            "decode_step": M.moe_decode_step,
+        })
+    if cfg.family == "hybrid":
+        from repro.models import mamba2 as Z
+
+        return Model(cfg, {
+            "init": lambda c, r: Z.init_zamba(c, r),
+            "train_loss": Z.zamba_train_loss,
+            "prefill": Z.zamba_prefill,
+            "decode_step": Z.zamba_decode_step,
+        })
+    if cfg.family == "ssm":
+        from repro.models import xlstm as X
+
+        return Model(cfg, {
+            "init": lambda c, r: X.init_xlstm(c, r),
+            "train_loss": X.xlstm_train_loss,
+            "prefill": X.xlstm_prefill,
+            "decode_step": X.xlstm_decode_step,
+        })
+    if cfg.family == "encdec":
+        from repro.models import encdec as E
+
+        return Model(cfg, {
+            "init": lambda c, r: E.init_encdec(c, r),
+            "train_loss": E.encdec_train_loss,
+            "prefill": E.encdec_prefill,
+            "decode_step": E.encdec_decode_step,
+        })
+    raise ValueError(f"unknown family {cfg.family}")

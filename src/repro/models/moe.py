@@ -1,0 +1,181 @@
+"""Mixture-of-Experts decoder (mixtral-8x22b, dbrx-132b).
+
+Baseline ``moe_impl="dense"`` scans over experts and weight-combines — simple,
+correct, compute-inflated by E/k (recorded in the roofline as useful-flops
+ratio; the capacity-dispatch EP implementation in ``moe_dispatch.py`` is the
+§Perf hillclimb for the MoE cells).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding import constrain
+from repro.models.transformer import (
+    _attn_layer_full,
+    _embed_tokens,
+    _positions,
+    _qkv,
+    cross_entropy,
+)
+
+
+def init_moe_layer(cfg: ModelConfig, rng) -> dict:
+    hd = cfg.resolved_head_dim
+    D, F, H, KVH, E = cfg.d_model, cfg.d_ff, cfg.num_heads, cfg.num_kv_heads, cfg.num_experts
+    ks = jax.random.split(rng, 9)
+    p = {
+        "ln1": jnp.ones((D,), jnp.float32),
+        "ln2": jnp.ones((D,), jnp.float32),
+        "wq": L.dense_init(ks[0], (D, H, hd)),
+        "wk": L.dense_init(ks[1], (D, KVH, hd)),
+        "wv": L.dense_init(ks[2], (D, KVH, hd)),
+        "wo": L.dense_init(ks[3], (H, hd, D), in_axis_size=H * hd),
+        "router": L.dense_init(ks[4], (D, E)),
+        "e_gate": L.dense_init(ks[5], (E, D, F), in_axis_size=D),
+        "e_up": L.dense_init(ks[6], (E, D, F), in_axis_size=D),
+        "e_down": L.dense_init(ks[7], (E, F, D), in_axis_size=F),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), jnp.float32)
+        p["bk"] = jnp.zeros((KVH, hd), jnp.float32)
+        p["bv"] = jnp.zeros((KVH, hd), jnp.float32)
+    return p
+
+
+def init_moe(cfg: ModelConfig, rng) -> dict:
+    k_embed, k_layers, k_head = jax.random.split(rng, 3)
+    layer_rngs = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.vmap(lambda r: init_moe_layer(cfg, r))(layer_rngs)
+    return {
+        "embed": L.dense_init(k_embed, (cfg.vocab_size, cfg.d_model),
+                              in_axis_size=cfg.d_model),
+        "layers": layers,
+        "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": L.dense_init(k_head, (cfg.d_model, cfg.vocab_size)),
+    }
+
+
+def router_weights(h, router, cfg: ModelConfig):
+    """Top-k routing -> per-expert combine weights (B, S, E) fp32."""
+    logits = jnp.einsum("bsd,de->bse", h.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    top, idx = jax.lax.top_k(logits, cfg.num_experts_per_tok)
+    top = jax.nn.softmax(top, axis=-1)  # normalize over selected experts
+    onehot = jax.nn.one_hot(idx, cfg.num_experts, dtype=jnp.float32)  # (B,S,k,E)
+    return jnp.einsum("bsk,bske->bse", top, onehot)
+
+
+def _moe_mlp(x, p, cfg: ModelConfig, shd):
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+
+    if cfg.moe_decode_gather and h.shape[1] == 1:
+        # §Perf: decode with tiny token count — gather ONLY the top-k
+        # experts' weights instead of streaming all E (B*k < E wins)
+        logits = jnp.einsum("bsd,de->bse", h.astype(jnp.float32),
+                            p["router"].astype(jnp.float32))[:, 0]
+        top, idx = jax.lax.top_k(logits, cfg.num_experts_per_tok)  # (B,k)
+        w = jax.nn.softmax(top, axis=-1)  # (B,k)
+        wg = jnp.take(p["e_gate"], idx, axis=0)  # (B,k,D,F)
+        wu = jnp.take(p["e_up"], idx, axis=0)
+        wd = jnp.take(p["e_down"], idx, axis=0)
+        hh = h[:, 0]  # (B,D)
+        g = jax.nn.silu(jnp.einsum("bd,bkdf->bkf", hh, wg.astype(hh.dtype)))
+        u = jnp.einsum("bd,bkdf->bkf", hh, wu.astype(hh.dtype))
+        y = jnp.einsum("bkf,bkfd->bkd", g * u, wd.astype(hh.dtype))
+        out = jnp.einsum("bk,bkd->bd", w.astype(y.dtype), y)[:, None]
+        return constrain(shd, "residual", x + out)
+
+    combine = router_weights(h, p["router"], cfg)  # (B,S,E)
+
+    if cfg.moe_impl == "dispatch":
+        from repro.models.moe_dispatch import moe_dispatch_mlp
+
+        out = moe_dispatch_mlp(h, combine, p, cfg, shd)
+        return constrain(shd, "residual", x + out.astype(x.dtype))
+
+    def body(acc, xs):
+        wg, wu, wd, w_e = xs
+        g = jax.nn.silu(jnp.einsum("bsd,df->bsf", h, wg.astype(h.dtype)))
+        u = jnp.einsum("bsd,df->bsf", h, wu.astype(h.dtype))
+        hh = constrain(shd, "ffn", g * u)
+        y = jnp.einsum("bsf,fd->bsd", hh, wd.astype(h.dtype))
+        return acc + w_e[..., None].astype(acc.dtype) * y.astype(acc.dtype), ()
+
+    acc0 = jnp.zeros(x.shape, jnp.float32)
+    acc, _ = jax.lax.scan(
+        body, acc0,
+        (p["e_gate"], p["e_up"], p["e_down"], combine.transpose(2, 0, 1)),
+    )
+    return constrain(shd, "residual", x + acc.astype(x.dtype))
+
+
+def _moe_layer_fwd(x, p, cfg, positions, shd):
+    x = _attn_layer_full(x, p, cfg, positions, shd)
+    return _moe_mlp(x, p, cfg, shd)
+
+
+def moe_train_loss(params, cfg: ModelConfig, batch, shd=None, vocab_chunk: int = 0):
+    B, S = batch["tokens"].shape
+    h = _embed_tokens(params, cfg, batch, shd)
+    positions = _positions(cfg, batch, B, S)
+
+    def body(x, p):
+        return jax.checkpoint(
+            lambda x_, p_: _moe_layer_fwd(x_, p_, cfg, positions, shd)
+        )(x, p), ()
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    return cross_entropy(h, params["lm_head"], batch["labels"], shd, vocab_chunk)
+
+
+def moe_prefill(params, cfg: ModelConfig, batch, shd=None, max_len=None):
+    B, S = batch["tokens"].shape
+    h = _embed_tokens(params, cfg, batch, shd)
+    positions = _positions(cfg, batch, B, S)
+    prompt_lens = batch.get("prompt_lens", jnp.full((B,), S, jnp.int32))
+
+    def body(x, p):
+        x, (k, v) = _attn_layer_full(x, p, cfg, positions, shd, return_kv=True)
+        x = _moe_mlp(x, p, cfg, shd)
+        return x, L.finalize_prefill_cache(k, v, cfg, max_len)
+
+    h, cache = jax.lax.scan(body, h, params["layers"])
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    idx = jnp.clip(prompt_lens - 1, 0, S - 1)
+    h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+    logits = jnp.einsum("bd,dv->bv", h_last, params["lm_head"].astype(h.dtype))
+    return constrain(shd, "logits", logits), cache, prompt_lens
+
+
+def moe_decode_step(params, cfg: ModelConfig, cache, batch, shd=None):
+    B = batch["tokens"].shape[0]
+    kv_len = batch["kv_len"]
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(L.COMPUTE_DTYPE)
+    positions = _positions(cfg, batch, B, 1, offset=kv_len)
+
+    def body(carry, xs):
+        x, c = carry
+        p, i = xs
+        hh = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(hh, p, cfg, shd)
+        q = L.apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = L.apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        c = L.cache_insert_layer(c, i, k, v, kv_len, cfg)
+        kc, vc = L.cache_layer_arrays(c, i, cfg)
+        S = kc.shape[1]
+        valid = jnp.minimum(kv_len + 1, S)
+        o = L.decode_attention(q, kc, vc, valid, kv_chunk=cfg.decode_kv_chunk)
+        o = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"].astype(x.dtype))
+        x = x + o
+        x = _moe_mlp(x, p, cfg, shd)
+        return (x, c), ()
+
+    (h, new_cache), _ = jax.lax.scan(
+        body, (h, cache), (params["layers"], jnp.arange(cfg.num_layers)))
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], params["lm_head"].astype(h.dtype))
+    return constrain(shd, "logits", logits), new_cache

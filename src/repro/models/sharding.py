@@ -1,0 +1,203 @@
+"""Sharding rules: param/activation/cache PartitionSpecs per (family, mode).
+
+Strategy (DESIGN.md §5):
+- train: batch over (pod, data); params + optimizer FSDP over `data` and TP
+  over `model` (ZeRO-3 x TP); residual stream sequence-parallel over `model`;
+  attention/ffn internals head/ffn-sharded over `model`.
+- prefill: batch over `data`, TP over `model` (params replicated over data:
+  weight-stationary, activation-heavy).
+- decode: batch over `data`; KV cache sharded kv_head-over-`model` when
+  kv_heads % |model| == 0, else head_dim-over-`model` (GQA with few KV heads);
+  params TP over `model` only.
+
+All functions return pytrees of PartitionSpec mirroring the param trees
+produced by repro.models.* init functions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+MODEL_AXIS = "model"
+
+
+def dp_axes(mesh: Mesh):
+    """Data-parallel axes: ('pod','data') on the multi-pod mesh."""
+    axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return axes if len(axes) > 1 else axes[0]
+
+
+class ShardingCtx:
+    """Activation-sharding hook threaded through model forward functions.
+
+    ``None`` ctx (smoke tests, single device) makes every constraint a no-op.
+    """
+
+    def __init__(self, mesh: Mesh, mode: str, cfg: ModelConfig,
+                 sequence_parallel: bool = True):
+        self.mesh = mesh
+        self.mode = mode  # train | prefill | decode
+        self.cfg = cfg
+        self.dp = dp_axes(mesh)
+        self.sp = sequence_parallel and mode == "train"
+        msize = mesh.shape[MODEL_AXIS]
+        self.kv_head_sharded = cfg.num_kv_heads % msize == 0
+        # §Perf: seq-sharded (ring-style) prefill attention when head counts
+        # don't divide the TP axis (avoids multi-GB score psums)
+        self.seq_shard = (cfg.seq_shard_attn and mode == "prefill"
+                          and cfg.num_heads % msize != 0)
+
+    def _c(self, x, spec):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    # ---- residual stream (B, S, D) ----
+    def residual(self, h):
+        if self.sp:
+            return self._c(h, P(self.dp, MODEL_AXIS, None))
+        return self._c(h, P(self.dp, None, None))
+
+    # ---- attention internals ----
+    def heads(self, x):  # (B, S, H, hd)
+        msize = self.mesh.shape[MODEL_AXIS]
+        if (self.mode == "decode" and not self.kv_head_sharded) or \
+                x.shape[2] % msize != 0:
+            if x.shape[3] % msize == 0:
+                return self._c(x, P(self.dp, None, None, MODEL_AXIS))
+            return self._c(x, P(self.dp, None, None, None))
+        return self._c(x, P(self.dp, None, MODEL_AXIS, None))
+
+    def ffn(self, x):  # (B, S, F)
+        return self._c(x, P(self.dp, None, MODEL_AXIS))
+
+    def scores(self, x):  # (B, H, G, C, S) attention scores/probs
+        msize = self.mesh.shape[MODEL_AXIS]
+        if self.seq_shard and x.shape[-1] % msize == 0:
+            return self._c(x, P(self.dp, None, None, None, MODEL_AXIS))
+        h = MODEL_AXIS if x.shape[1] % msize == 0 else None
+        return self._c(x, P(self.dp, h, None, None, None))
+
+    def kv_seq(self, x):  # (B, S, KVH, hd) keys/values, seq-sharded path
+        msize = self.mesh.shape[MODEL_AXIS]
+        if self.seq_shard and x.shape[1] % msize == 0:
+            return self._c(x, P(self.dp, MODEL_AXIS, None, None))
+        return x
+
+    def q_rep(self, x):  # query chunk, replicate inner dims (seq-shard path)
+        if self.seq_shard:
+            return self._c(x, P(self.dp, None, None, None, None))
+        return x
+
+    def logits(self, x):  # (B, S, V) or (B, V)
+        msize = self.mesh.shape[MODEL_AXIS]
+        v = MODEL_AXIS if x.shape[-1] % msize == 0 else None
+        if x.ndim == 3:
+            return self._c(x, P(self.dp, None, v))
+        return self._c(x, P(self.dp, v))
+
+
+def constrain(shd: Optional[ShardingCtx], kind: str, x):
+    if shd is None:
+        return x
+    return getattr(shd, kind)(x)
+
+
+# ---------------------------------------------------------------------------
+# Param specs.  ``mode``: "train" -> FSDP(data) x TP(model); "serve" -> TP.
+# ---------------------------------------------------------------------------
+
+
+def _fsdp(mode, mesh):
+    return "data" if (mode == "train" and "data" in mesh.axis_names) else None
+
+
+def dense_layer_specs(cfg: ModelConfig, mesh: Mesh, mode: str) -> dict:
+    f = _fsdp(mode, mesh)
+    m = MODEL_AXIS
+    kv_hd = None
+    kv_h = m
+    if mode != "train" and cfg.num_kv_heads % mesh.shape[m] != 0:
+        kv_h, kv_hd = None, m  # head_dim-sharded KV path
+    specs = {
+        "ln1": P(None, None),
+        "ln2": P(None, None),
+        "wq": P(None, f, m, None) if kv_hd is None else P(None, f, None, m),
+        "wk": P(None, f, kv_h, kv_hd),
+        "wv": P(None, f, kv_h, kv_hd),
+        "wo": P(None, m, None, f) if kv_hd is None else P(None, None, m, f),
+        "w_gate": P(None, f, m),
+        "w_up": P(None, f, m),
+        "w_down": P(None, m, f),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = P(None, m, None) if kv_hd is None else P(None, None, m)
+        specs["bk"] = P(None, kv_h, kv_hd)
+        specs["bv"] = P(None, kv_h, kv_hd)
+    return specs
+
+
+def moe_layer_specs(cfg: ModelConfig, mesh: Mesh, mode: str) -> dict:
+    specs = dense_layer_specs(cfg, mesh, mode)
+    f = _fsdp(mode, mesh)
+    m = MODEL_AXIS
+    for k in ("w_gate", "w_up", "w_down"):
+        del specs[k]
+    if cfg.moe_impl == "ep":
+        # expert-parallel: experts over `model`
+        specs.update({
+            "router": P(None, None, None),
+            "e_gate": P(None, m, f, None),
+            "e_up": P(None, m, f, None),
+            "e_down": P(None, m, None, f),
+        })
+    else:
+        specs.update({
+            "router": P(None, None, None),
+            "e_gate": P(None, None, f, m),
+            "e_up": P(None, None, f, m),
+            "e_down": P(None, None, m, f),
+        })
+    return specs
+
+
+def mamba_layer_specs(cfg: ModelConfig, mesh: Mesh, mode: str) -> dict:
+    f = _fsdp(mode, mesh)
+    m = MODEL_AXIS
+    return {
+        "ln": P(None, None),
+        "w_in": P(None, f, m),       # (L, D, 2*d_inner + 2N + H)
+        "conv_w": P(None, None, m),  # (L, width, d_inner + 2N)
+        "conv_b": P(None, m),
+        "A_log": P(None, m),         # (L, H_m)
+        "dt_bias": P(None, m),
+        "D_skip": P(None, m),
+        "w_out": P(None, m, f),      # (L, d_inner, D)
+        "ln_gate": P(None, m),
+    }
+
+
+def embed_specs(cfg: ModelConfig, mesh: Mesh, mode: str) -> dict:
+    f = _fsdp(mode, mesh)
+    return {
+        "embed": P(MODEL_AXIS, f),
+        "final_ln": P(None),
+        "lm_head": P(f, MODEL_AXIS),
+    }
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    return P(dp_axes(mesh), None)
+
+
+def cache_pspec(cfg: ModelConfig, mesh: Mesh) -> P:
+    """(L, B, S, KVH, hd)"""
+    if cfg.num_kv_heads % mesh.shape[MODEL_AXIS] == 0:
+        return P(None, "data", None, MODEL_AXIS, None)
+    return P(None, "data", None, None, MODEL_AXIS)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)

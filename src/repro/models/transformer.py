@@ -1,0 +1,252 @@
+"""Dense decoder-only transformer (llama/qwen family) + VLM backbone variant.
+
+Scan-over-layers with stacked (L, ...) params so the HLO stays small for the
+512-device dry-run compiles.  Three entry points per model: ``train_loss``,
+``prefill``, ``decode_step`` (see repro.models.model for the unified API).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_dense_layer(cfg: ModelConfig, rng) -> dict:
+    hd = cfg.resolved_head_dim
+    D, F, H, KVH = cfg.d_model, cfg.d_ff, cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(rng, 12)
+    p = {
+        "ln1": jnp.ones((D,), jnp.float32),
+        "ln2": jnp.ones((D,), jnp.float32),
+        "wq": L.dense_init(ks[0], (D, H, hd)),
+        "wk": L.dense_init(ks[1], (D, KVH, hd)),
+        "wv": L.dense_init(ks[2], (D, KVH, hd)),
+        "wo": L.dense_init(ks[3], (H, hd, D), in_axis_size=H * hd),
+        "w_gate": L.dense_init(ks[4], (D, F)),
+        "w_up": L.dense_init(ks[5], (D, F)),
+        "w_down": L.dense_init(ks[6], (F, D), in_axis_size=F),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), jnp.float32)
+        p["bk"] = jnp.zeros((KVH, hd), jnp.float32)
+        p["bv"] = jnp.zeros((KVH, hd), jnp.float32)
+    return p
+
+
+def init_dense(cfg: ModelConfig, rng) -> dict:
+    k_embed, k_layers, k_head = jax.random.split(rng, 3)
+    layer_rngs = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.vmap(lambda r: init_dense_layer(cfg, r))(layer_rngs)
+    return {
+        "embed": L.dense_init(k_embed, (cfg.vocab_size, cfg.d_model),
+                              in_axis_size=cfg.d_model),
+        "layers": layers,
+        "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": L.dense_init(k_head, (cfg.d_model, cfg.vocab_size)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, cfg, batch, shd):
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(L.COMPUTE_DTYPE)
+    if cfg.num_visual_tokens and "visual_embeds" in batch:
+        vis = batch["visual_embeds"].astype(L.COMPUTE_DTYPE)
+        h = jax.lax.dynamic_update_slice(h, vis, (0, 1, 0))  # after BOS
+    return constrain(shd, "residual", h)
+
+
+def _positions(cfg, batch, B, S, offset=None):
+    if cfg.mrope_sections:
+        if "mrope_positions" in batch:
+            return batch["mrope_positions"]
+        base = jnp.arange(S)[None, :] if offset is None else offset[:, None] + jnp.arange(S)[None, :]
+        base = jnp.broadcast_to(base, (B, S))
+        return jnp.repeat(base[..., None], len(cfg.mrope_sections), axis=-1)
+    if offset is None:
+        return jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    return offset[:, None] + jnp.arange(S)[None, :]
+
+
+def _qkv(x, p, cfg, shd):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return constrain(shd, "heads", q), k, v
+
+
+def _attn_layer_full(x, p, cfg, positions, shd, return_kv=False):
+    """Full-sequence attention sublayer (train / prefill)."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(h, p, cfg, shd)
+    q = L.apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = L.apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    o = L.causal_attention(q, k, v, chunk=cfg.attn_chunk,
+                           window=cfg.sliding_window, shd=shd)
+    o = constrain(shd, "heads", o)
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    x = x + o
+    x = constrain(shd, "residual", x)
+    if return_kv:
+        return x, (k, v)
+    return x
+
+
+def _mlp_layer(x, p, cfg, shd):
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", h, p["w_gate"].astype(h.dtype)))
+    u = jnp.einsum("bsd,df->bsf", h, p["w_up"].astype(h.dtype))
+    hh = constrain(shd, "ffn", g * u)
+    o = jnp.einsum("bsf,fd->bsd", hh, p["w_down"].astype(h.dtype))
+    return constrain(shd, "residual", x + o)
+
+
+def _dense_layer_fwd(x, p, cfg, positions, shd):
+    x = _attn_layer_full(x, p, cfg, positions, shd)
+    return _mlp_layer(x, p, cfg, shd)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(h, lm_head, labels, shd, vocab_chunk: int = 0):
+    """h: (B,S,D) post-final-norm; labels: (B,S) with -1 = masked.
+
+    vocab_chunk > 0 -> streaming logsumexp over vocab chunks (never
+    materializes (B,S,V) fp32; §Perf option).
+    """
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    V = lm_head.shape[-1]
+    if not vocab_chunk or V % vocab_chunk:
+        logits = jnp.einsum("bsd,dv->bsv", h, lm_head.astype(h.dtype))
+        logits = constrain(shd, "logits", logits).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    else:
+        n = V // vocab_chunk
+        w = lm_head.reshape(lm_head.shape[0], n, vocab_chunk)
+
+        def body(carry, wi_i):
+            m, s, gold = carry
+            wi, i = wi_i
+            lg = jnp.einsum("bsd,dv->bsv", h, wi.astype(h.dtype)).astype(jnp.float32)
+            cm = jnp.max(lg, axis=-1)
+            nm = jnp.maximum(m, cm)
+            s = s * jnp.exp(m - nm) + jnp.sum(jnp.exp(lg - nm[..., None]), axis=-1)
+            loc = safe - i * vocab_chunk
+            hit = (loc >= 0) & (loc < vocab_chunk)
+            g = jnp.take_along_axis(lg, jnp.clip(loc, 0, vocab_chunk - 1)[..., None], axis=-1)[..., 0]
+            gold = jnp.where(hit, g, gold)
+            return (nm, s, gold), ()
+
+        B, S = labels.shape
+        init = (jnp.full((B, S), -1e30, jnp.float32), jnp.zeros((B, S), jnp.float32),
+                jnp.zeros((B, S), jnp.float32))
+        (m, s, gold), _ = jax.lax.scan(body, init, (w.transpose(1, 0, 2), jnp.arange(n)))
+        lse, ll = m + jnp.log(s), gold
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def dense_train_loss(params, cfg: ModelConfig, batch, shd=None, vocab_chunk: int = 0):
+    B, S = batch["tokens"].shape
+    h = _embed_tokens(params, cfg, batch, shd)
+    positions = _positions(cfg, batch, B, S)
+
+    def body(x, p):
+        return jax.checkpoint(
+            lambda x_, p_: _dense_layer_fwd(x_, p_, cfg, positions, shd)
+        )(x, p), ()
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    return cross_entropy(h, params["lm_head"], batch["labels"], shd, vocab_chunk)
+
+
+def dense_prefill(params, cfg: ModelConfig, batch, shd=None, max_len=None):
+    """Returns (last-token logits (B, V), cache, kv_len (B,)).
+
+    ``max_len`` (static) over-allocates the cache for decode growth.
+    """
+    B, S = batch["tokens"].shape
+    h = _embed_tokens(params, cfg, batch, shd)
+    positions = _positions(cfg, batch, B, S)
+    prompt_lens = batch.get("prompt_lens", jnp.full((B,), S, jnp.int32))
+
+    def body(x, p):
+        x, (k, v) = _attn_layer_full(x, p, cfg, positions, shd, return_kv=True)
+        x = _mlp_layer(x, p, cfg, shd)
+        return x, L.finalize_prefill_cache(k, v, cfg, max_len)
+
+    h, cache = jax.lax.scan(body, h, params["layers"])
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    # gather hidden at last prompt position per sequence
+    idx = jnp.clip(prompt_lens - 1, 0, S - 1)
+    h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+    logits = jnp.einsum("bd,dv->bv", h_last, params["lm_head"].astype(h.dtype))
+    return constrain(shd, "logits", logits), cache, prompt_lens
+
+
+def dense_decode_step(params, cfg: ModelConfig, cache, batch, shd=None):
+    """batch: tokens (B,1), kv_len (B,).  Returns (logits (B,V), new cache).
+
+    The stacked cache is CARRIED through the layer scan and updated with a
+    one-token scatter per layer (in-place on the donated buffer) — never a
+    whole-layer rewrite.
+    """
+    B = batch["tokens"].shape[0]
+    kv_len = batch["kv_len"]
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(L.COMPUTE_DTYPE)
+    positions = _positions(cfg, batch, B, 1, offset=kv_len)
+    Lnum = cfg.num_layers
+
+    def body(carry, xs):
+        x, c = carry
+        p, i = xs
+        hh = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(hh, p, cfg, shd)
+        q = L.apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = L.apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        c = L.cache_insert_layer(c, i, k, v, kv_len, cfg)
+        kc, vc = L.cache_layer_arrays(c, i, cfg)
+        S = kc.shape[1]
+        valid = jnp.minimum(kv_len + 1, S)
+        o = L.decode_attention(q, kc, vc, valid, kv_chunk=cfg.decode_kv_chunk)
+        o = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"].astype(x.dtype))
+        x = x + o
+        x = _mlp_layer(x, p, cfg, shd)
+        return (x, c), ()
+
+    (h, new_cache), _ = jax.lax.scan(
+        body, (h, cache), (params["layers"], jnp.arange(Lnum)))
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], params["lm_head"].astype(h.dtype))
+    return constrain(shd, "logits", logits), new_cache
+
+
+def init_cache_shape(cfg: ModelConfig, batch: int, max_len: int):
+    return L.init_kv_cache(cfg, cfg.num_layers, batch, max_len, cfg.num_kv_heads)

@@ -1,0 +1,307 @@
+"""xLSTM: alternating mLSTM (matrix memory, parallel form) and sLSTM
+(scalar memory, strictly recurrent) blocks.
+
+- mLSTM train/prefill uses the parallel (attention-like, exp-gated) form with
+  query-chunked scanning; decode uses the O(1) recurrent form.
+- sLSTM is sequential in time (recurrent h dependency) -> lax.scan over time.
+- No KV cache: decode state is (C, n, m) / (c, n, h, m) per block, so the
+  arch runs long_500k.  BlockLLM's KV-coordination policy degenerates to
+  recurrent-state ownership (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding import constrain
+from repro.models.transformer import cross_entropy
+
+# block i is mLSTM if i % 2 == 0 else sLSTM
+
+
+def _dims(cfg: ModelConfig):
+    D = cfg.d_model
+    Di = 2 * D  # mLSTM up-projection factor 2
+    H = cfg.num_heads
+    dk = Di // H
+    dh = D // H  # sLSTM head dim
+    Fs = int(round(4 * D / 3 / 64) * 64) or 64  # sLSTM ffn pf 4/3
+    return D, Di, H, dk, dh, Fs
+
+
+def init_mlstm_block(cfg: ModelConfig, rng) -> dict:
+    D, Di, H, dk, _, _ = _dims(cfg)
+    ks = jax.random.split(rng, 8)
+    return {
+        "ln": jnp.ones((D,), jnp.float32),
+        "w_up": L.dense_init(ks[0], (D, 2 * Di)),
+        "wq": L.dense_init(ks[1], (Di, Di), in_axis_size=Di),
+        "wk": L.dense_init(ks[2], (Di, Di), in_axis_size=Di),
+        "wv": L.dense_init(ks[3], (Di, Di), in_axis_size=Di),
+        "w_i": L.dense_init(ks[4], (Di, H), in_axis_size=Di),
+        "w_f": L.dense_init(ks[5], (Di, H), in_axis_size=Di),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": 3.0 * jnp.ones((H,), jnp.float32),  # forget-gate bias init
+        "ln_cell": jnp.ones((Di,), jnp.float32),
+        "w_down": L.dense_init(ks[6], (Di, D), in_axis_size=Di),
+    }
+
+
+def init_slstm_block(cfg: ModelConfig, rng) -> dict:
+    D, _, H, _, dh, Fs = _dims(cfg)
+    ks = jax.random.split(rng, 7)
+    return {
+        "ln": jnp.ones((D,), jnp.float32),
+        "w_gates": L.dense_init(ks[0], (D, 4, H, dh)),  # i,f,z,o input kernels
+        "r_gates": 0.1 * jax.random.normal(ks[1], (4, H, dh, dh), jnp.float32) / math.sqrt(dh),
+        "b_gates": jnp.zeros((4, H, dh), jnp.float32).at[1].set(3.0),
+        "ln_out": jnp.ones((D,), jnp.float32),
+        "ffn_gate": L.dense_init(ks[2], (D, Fs)),
+        "ffn_up": L.dense_init(ks[3], (D, Fs)),
+        "ffn_down": L.dense_init(ks[4], (Fs, D), in_axis_size=Fs),
+    }
+
+
+def init_xlstm(cfg: ModelConfig, rng) -> dict:
+    k_embed, k_blocks, k_head = jax.random.split(rng, 3)
+    rngs = jax.random.split(k_blocks, cfg.num_layers)
+    blocks = []
+    for i in range(cfg.num_layers):
+        if i % 2 == 0:
+            blocks.append(init_mlstm_block(cfg, rngs[i]))
+        else:
+            blocks.append(init_slstm_block(cfg, rngs[i]))
+    return {
+        "embed": L.dense_init(k_embed, (cfg.vocab_size, cfg.d_model),
+                              in_axis_size=cfg.d_model),
+        "blocks": blocks,  # python list (heterogeneous; 12 layers is small)
+        "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": L.dense_init(k_head, (cfg.d_model, cfg.vocab_size)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_parallel(q, k, v, i_raw, f_raw, chunk: int):
+    """Parallel exp-gated form, scanned over query chunks.
+
+    q,k,v: (B,S,H,dk); i_raw,f_raw: (B,S,H).  Returns (B,S,H,dk).
+    """
+    B, S, H, dk = q.shape
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))  # (B,S,H)
+    F = jnp.cumsum(logf, axis=1)  # inclusive
+    i32 = i_raw.astype(jnp.float32)
+    C = min(chunk, S)
+    Sp = ((S + C - 1) // C) * C
+    qp, Fp = q, F
+    if Sp != S:
+        qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        Fp = jnp.pad(F, ((0, 0), (0, Sp - S), (0, 0)))
+    n = Sp // C
+
+    qs = qp.reshape(B, n, C, H, dk).transpose(1, 0, 2, 3, 4)
+    Fq = Fp.reshape(B, n, C, H).transpose(1, 0, 2, 3)
+
+    kpos = jnp.arange(S)
+
+    def body(_, xs):
+        qc, Fc, ci = xs  # (B,C,H,dk), (B,C,H), scalar chunk idx
+        qpos = ci * C + jnp.arange(C)
+        # log decay D(i,j) = i_j + sum_{t=j+1..i} logf_t = i_j + F_i - F_j
+        logD = Fc[:, :, None, :] - F[:, None, :, :] + i32[:, None]  # (B,C,S,H)
+        mask = (kpos[None, :] <= qpos[:, None])[None, :, :, None]
+        logD = jnp.where(mask, logD, -jnp.inf)
+        m = jnp.max(logD, axis=2, keepdims=True)  # (B,C,1,H)
+        m = jnp.maximum(m, -1e30)
+        s = jnp.einsum("bchd,bshd->bcsh", qc, k,
+                       preferred_element_type=jnp.float32) / math.sqrt(dk)
+        w = s * jnp.exp(logD - m)
+        w = jnp.where(mask, w, 0.0)
+        norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2, keepdims=True)),
+                           jnp.exp(-m))  # (B,C,1,H)
+        y = jnp.einsum("bcsh,bshd->bchd", w, v.astype(jnp.float32))
+        y = y / norm[:, :, 0][..., None]  # (B,C,H,dk) / (B,C,H,1)
+        return (), y
+
+    _, ys = jax.lax.scan(body, (), (qs, Fq, jnp.arange(n)))
+    return ys.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, dk)[:, :S]
+
+
+def _mlstm_step(q, k, v, i_raw, f_raw, state):
+    """Recurrent step.  q,k,v: (B,H,dk); gates: (B,H).  state: (C,n,m)."""
+    Cm, nm, m = state  # (B,H,dk,dk), (B,H,dk), (B,H)
+    dk = q.shape[-1]
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    i32 = i_raw.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, i32)
+    fdec = jnp.exp(logf + m - m_new)[..., None]
+    iexp = jnp.exp(i32 - m_new)[..., None]
+    k32, v32, q32 = (t.astype(jnp.float32) for t in (k, v, q))
+    C_new = fdec[..., None] * Cm + iexp[..., None] * k32[..., :, None] * v32[..., None, :]
+    n_new = fdec * nm + iexp * k32
+    h_num = jnp.einsum("bhd,bhde->bhe", q32 / math.sqrt(dk), C_new)
+    h_den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", q32 / math.sqrt(dk), n_new)),
+        jnp.exp(-m_new))
+    y = h_num / h_den[..., None]
+    return y, (C_new, n_new, m_new)
+
+
+def mlstm_block(x, p, cfg, shd, state=None):
+    D, Di, H, dk, _, _ = _dims(cfg)
+    res = x
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", h, p["w_up"].astype(h.dtype))
+    u, gate = jnp.split(up, 2, axis=-1)
+    B, S = u.shape[:2]
+    q = jnp.einsum("bse,ef->bsf", u, p["wq"].astype(u.dtype)).reshape(B, S, H, dk)
+    k = jnp.einsum("bse,ef->bsf", u, p["wk"].astype(u.dtype)).reshape(B, S, H, dk)
+    v = jnp.einsum("bse,ef->bsf", u, p["wv"].astype(u.dtype)).reshape(B, S, H, dk)
+    i_raw = jnp.einsum("bse,eh->bsh", u.astype(jnp.float32), p["w_i"]) + p["b_i"]
+    f_raw = jnp.einsum("bse,eh->bsh", u.astype(jnp.float32), p["w_f"]) + p["b_f"]
+    if state is None:
+        y = _mlstm_parallel(q, k, v, i_raw, f_raw, cfg.attn_chunk)
+        new_state = None  # train path
+    else:
+        y, new_state = _mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                   i_raw[:, 0], f_raw[:, 0], state)
+        y = y[:, None]
+    y = y.reshape(B, S, Di)
+    y = L.rms_norm(y.astype(x.dtype), p["ln_cell"], cfg.norm_eps)
+    y = y * jax.nn.silu(gate)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"].astype(x.dtype))
+    return constrain(shd, "residual", res + out), new_state
+
+
+def mlstm_final_state(q, k, v, i_raw, f_raw):
+    """Final (C,n,m) after a full prefill sequence (for decode handoff)."""
+    B, S, H, dk = q.shape
+    state = (jnp.zeros((B, H, dk, dk), jnp.float32),
+             jnp.zeros((B, H, dk), jnp.float32),
+             jnp.full((B, H), -1e30, jnp.float32))
+
+    def body(st, xs):
+        qt, kt, vt, it, ft = xs
+        _, st = _mlstm_step(qt, kt, vt, it, ft, st)
+        return st, ()
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (q, k, v)) + tuple(
+        t.transpose(1, 0, 2) for t in (i_raw, f_raw))
+    state, _ = jax.lax.scan(body, state, xs)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def _slstm_scan(g_in, r, state):
+    """g_in: (B,S,4,H,dh) input-kernel preactivations (+bias).
+    r: (4,H,dh,dh) recurrent kernels.  state: (c,n,h,m) each (B,H,dh)."""
+
+    def step(st, g_t):
+        c, n, h, m = st
+        rec = jnp.einsum("bhd,ghde->bghe", h, r)  # (B,4,H,dh)
+        it, ft, zt, ot = (g_t[:, i] + rec[:, i] for i in range(4))
+        m_new = jnp.maximum(ft + m, it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(ft + m - m_new)
+        c_new = f_g * c + i_g * jnp.tanh(zt)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    state, hs = jax.lax.scan(step, state, g_in.transpose(1, 0, 2, 3, 4))
+    return hs.transpose(1, 0, 2, 3), state  # (B,S,H,dh)
+
+
+def slstm_block(x, p, cfg, shd, state=None):
+    D, _, H, _, dh, Fs = _dims(cfg)
+    res = x
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    B, S = h.shape[:2]
+    g_in = jnp.einsum("bsd,dghe->bsghe", h.astype(jnp.float32), p["w_gates"]) + p["b_gates"]
+    if state is None:
+        state = (jnp.zeros((B, H, dh), jnp.float32),) * 2 + (
+            jnp.zeros((B, H, dh), jnp.float32), jnp.full((B, H, dh), -1e30, jnp.float32))
+    hs, new_state = _slstm_scan(g_in, p["r_gates"], state)
+    y = hs.reshape(B, S, D).astype(x.dtype)
+    y = L.rms_norm(y, p["ln_out"], cfg.norm_eps)
+    x = res + y
+    # gated FFN (pf 4/3)
+    hh = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["ffn_gate"].astype(x.dtype)))
+    uu = jnp.einsum("bsd,df->bsf", x, p["ffn_up"].astype(x.dtype))
+    out = jnp.einsum("bsf,fd->bsd", hh * uu, p["ffn_down"].astype(x.dtype))
+    return constrain(shd, "residual", x + out), new_state
+
+
+# ---------------------------------------------------------------------------
+# model entry points
+# ---------------------------------------------------------------------------
+
+
+def _trunk(params, cfg, h, shd, states=None, collect=False):
+    new_states = []
+    for i, p in enumerate(params["blocks"]):
+        st = states[i] if states is not None else None
+        if i % 2 == 0:
+            if collect and st is None:
+                # prefill: run parallel form for outputs + recurrence for state
+                D, Di, H, dk, _, _ = _dims(cfg)
+                hh = L.rms_norm(h, p["ln"], cfg.norm_eps)
+                up = jnp.einsum("bsd,de->bse", hh, p["w_up"].astype(hh.dtype))
+                u, _ = jnp.split(up, 2, axis=-1)
+                B, S = u.shape[:2]
+                q = jnp.einsum("bse,ef->bsf", u, p["wq"].astype(u.dtype)).reshape(B, S, H, dk)
+                k = jnp.einsum("bse,ef->bsf", u, p["wk"].astype(u.dtype)).reshape(B, S, H, dk)
+                v = jnp.einsum("bse,ef->bsf", u, p["wv"].astype(u.dtype)).reshape(B, S, H, dk)
+                i_raw = jnp.einsum("bse,eh->bsh", u.astype(jnp.float32), p["w_i"]) + p["b_i"]
+                f_raw = jnp.einsum("bse,eh->bsh", u.astype(jnp.float32), p["w_f"]) + p["b_f"]
+                fin = mlstm_final_state(q, k, v, i_raw, f_raw)
+                h, _ = mlstm_block(h, p, cfg, shd, state=None)
+                new_states.append(fin)
+            else:
+                h, ns = mlstm_block(h, p, cfg, shd, state=st)
+                new_states.append(ns)
+        else:
+            h, ns = slstm_block(h, p, cfg, shd, state=st)
+            new_states.append(ns)
+    return h, new_states
+
+
+def xlstm_train_loss(params, cfg: ModelConfig, batch, shd=None, vocab_chunk: int = 0):
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(L.COMPUTE_DTYPE)
+    h = constrain(shd, "residual", h)
+    h, _ = _trunk(params, cfg, h, shd)
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    return cross_entropy(h, params["lm_head"], batch["labels"], shd, vocab_chunk)
+
+
+def xlstm_prefill(params, cfg: ModelConfig, batch, shd=None, max_len=None):
+    B, S = batch["tokens"].shape
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(L.COMPUTE_DTYPE)
+    h = constrain(shd, "residual", h)
+    prompt_lens = batch.get("prompt_lens", jnp.full((B,), S, jnp.int32))
+    h, states = _trunk(params, cfg, h, shd, collect=True)
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    idx = jnp.clip(prompt_lens - 1, 0, S - 1)
+    h_last = jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+    logits = jnp.einsum("bd,dv->bv", h_last, params["lm_head"].astype(h.dtype))
+    return constrain(shd, "logits", logits), tuple(states), prompt_lens
+
+
+def xlstm_decode_step(params, cfg: ModelConfig, cache, batch, shd=None):
+    h = jnp.take(params["embed"], batch["tokens"], axis=0).astype(L.COMPUTE_DTYPE)
+    h, new_states = _trunk(params, cfg, h, shd, states=list(cache))
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", h[:, 0], params["lm_head"].astype(h.dtype))
+    return constrain(shd, "logits", logits), tuple(new_states)

@@ -1,0 +1,71 @@
+"""Cluster model: servers, devices, links — the substrate the scheduler and
+agents run against.
+
+The control plane (scheduler / agents / KV registry) is the REAL
+implementation; time advances through the cost model (paper §5.1/§5.3
+formulas with TPU v5e constants, DESIGN.md §2).  The same classes back the
+real small-scale engine (repro.serving.engine) and the discrete-event
+evaluation (repro.serving.simulator).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# hardware constants (DESIGN.md §2; per-chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # B/s
+INTRA_SERVER_BW = 50e9     # B/s  (ICI neighbour link)
+INTER_SERVER_BW = 12.5e9   # B/s  (100 Gbps DCN, paper's network)
+HOST_TO_DEVICE_BW = 16e9   # B/s  (block load from host memory)
+DEVICE_MEMORY = 16e9       # bytes (v5e HBM)
+
+
+@dataclass
+class Device:
+    device_id: int
+    server_id: int
+    memory: int = DEVICE_MEMORY
+    # dynamic state
+    resident_blocks: Dict[str, int] = field(default_factory=dict)  # id -> bytes
+    kv_bytes: int = 0
+    busy_until: float = 0.0
+    busy_time: float = 0.0
+    useful_flop_time: float = 0.0  # for SM-efficiency
+
+    def used(self) -> int:
+        return sum(self.resident_blocks.values()) + self.kv_bytes
+
+    def free(self) -> int:
+        return self.memory - self.used()
+
+
+@dataclass
+class Cluster:
+    n_servers: int
+    devices_per_server: List[int]
+    devices: List[Device] = field(default_factory=list)
+
+    def __post_init__(self):
+        did = 0
+        for sid, n in enumerate(self.devices_per_server):
+            for _ in range(n):
+                self.devices.append(Device(did, sid))
+                did += 1
+
+    def bw(self, a: int, b: int) -> float:
+        """Network bandwidth between two devices."""
+        da, db = self.devices[a], self.devices[b]
+        if a == b:
+            return HBM_BW
+        if da.server_id == db.server_id:
+            return INTRA_SERVER_BW
+        return INTER_SERVER_BW
+
+    def same_server(self, a: int, b: int) -> bool:
+        return self.devices[a].server_id == self.devices[b].server_id
+
+
+def paper_cluster() -> Cluster:
+    """Paper §7.1: four servers — 2x 2 devices + 2x 4 devices (12 total)."""
+    return Cluster(4, [2, 2, 4, 4])

@@ -1,0 +1,550 @@
+"""BlockLLM online serving system (paper §5) + PM/PS baselines (§7.1).
+
+The scheduler, agents, per-block queues, KV-ownership registry, speculation
+and placement logic are the real control plane; time advances through the
+§5.1/§5.3 cost model (discrete-event).  The same scheduler/agent classes are
+reused by the real-execution engine at laptop scale (repro.serving.engine).
+
+Modes: "blockllm" | "pm" (per-model provisioning) | "ps" (parameter sharing,
+S-LoRA-like merged engine with branching overhead).
+Ablations (paper §7.3) via SchedulerConfig flags.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.cluster import Cluster, HBM_BW, paper_cluster
+from repro.serving.cost_model import (
+    BlockCost,
+    best_kv_strategy,
+    estimate_latency,
+    t_revisit_owner,
+)
+from repro.serving.request import Request
+
+TOKEN_BYTES = 8192  # bytes shipped per generated token (hidden-state row)
+
+
+# ---------------------------------------------------------------------------
+# serving configuration: apps, chains, logical blocks
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LogicalBlock:
+    block_id: str
+    cost: BlockCost
+    equivalents: List[str] = field(default_factory=list)  # adaptive candidates
+
+
+@dataclass
+class AppChain:
+    app: str
+    blocks: List[str]  # logical block ids, in order
+    branching: int = 1  # PS mode: number of merged variants
+
+
+@dataclass
+class ServingConfig:
+    blocks: Dict[str, LogicalBlock]
+    chains: Dict[str, AppChain]
+    max_batch: int = 32
+
+
+def build_serving_config(n_foundations: int = 3, n_apps: int = 20,
+                         segments: int = 4, params_per_model: float = 7e9,
+                         mode: str = "blockllm", seed: int = 0,
+                         vocab_kv_bytes: int = 64 * 1024) -> ServingConfig:
+    """Synthesize a multi-tenant zoo: ``n_apps`` fine-tuned variants over
+    ``n_foundations`` foundations, each partitioned into ``segments`` blocks.
+
+    - PEFT variants (2/3 of apps) share every foundation segment;
+    - FPFT variants own ONE divergent segment with an equivalence edge back
+      to the foundation segment (adaptive-serving candidate, §4.1);
+    - pm mode: every app gets private copies of every segment.
+    """
+    rng = np.random.RandomState(seed)
+    blocks: Dict[str, LogicalBlock] = {}
+    chains: Dict[str, AppChain] = {}
+    seg_params = params_per_model / segments
+    seg_bytes = int(seg_params * 2)  # bf16
+
+    def mk_block(bid: str) -> LogicalBlock:
+        cost = BlockCost(block_id=bid, param_bytes=seg_bytes,
+                         flops_per_token=2.0 * seg_params,
+                         kv_bytes_per_token=vocab_kv_bytes // segments)
+        blk = LogicalBlock(bid, cost)
+        blocks[bid] = blk
+        return blk
+
+    foundations = [f"fnd{i}" for i in range(n_foundations)]
+    for f in foundations:
+        for s in range(segments):
+            mk_block(f"{f}/seg{s}")
+
+    for a in range(n_apps):
+        f = foundations[a % n_foundations]
+        kind = "peft" if a % 3 != 0 else "fpft"
+        app = f"app{a}"
+        if mode == "pm":
+            chain = []
+            for s in range(segments):
+                bid = f"{app}/seg{s}"
+                mk_block(bid)
+                chain.append(bid)
+            chains[app] = AppChain(app, chain)
+            continue
+        if kind == "peft" or mode == "ps":
+            chains[app] = AppChain(
+                app, [f"{f}/seg{s}" for s in range(segments)],
+                branching=1)
+        else:  # fpft: one divergent segment with an equivalence edge
+            div = int(rng.randint(0, segments))
+            chain = []
+            for s in range(segments):
+                if s == div:
+                    bid = f"{app}/seg{s}"
+                    mk_block(bid)
+                    blocks[bid].equivalents.append(f"{f}/seg{s}")
+                    blocks[f"{f}/seg{s}"].equivalents.append(bid)
+                    chain.append(bid)
+                else:
+                    chain.append(f"{f}/seg{s}")
+            chains[app] = AppChain(app, chain)
+    if mode == "ps":
+        # merged engine: every chain over a foundation shares instances but
+        # pays a branching overhead proportional to merged variants
+        per_f = defaultdict(int)
+        for app, c in chains.items():
+            per_f[c.blocks[0].split("/")[0]] += 1
+        for app, c in chains.items():
+            c.branching = per_f[c.blocks[0].split("/")[0]]
+    return ServingConfig(blocks, chains)
+
+
+# ---------------------------------------------------------------------------
+# scheduler / agents / instances
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SchedulerConfig:
+    mode: str = "blockllm"
+    adaptive: bool = True                 # O1 (§5.3)
+    kv_policy: str = "owner"              # owner | recalc | least-busy (§5.1/Fig 21)
+    speculation: bool = True              # §5.2
+    spec_top_frac: float = 0.10           # top 10% bottleneck instances (§7.1)
+    spec_speedup: float = 20.0            # surrogate speedup (Table 4)
+    spec_accuracy: float = 0.83           # 192/231 accurate (paper §7.3)
+    placement: str = "locality"           # locality | fragmentation (§5.3/Fig 23)
+    scale_queue_threshold: int = 8        # queue length per block -> scale out
+    rescale_period: float = 2.0
+    max_batch: int = 32
+    branching_overhead: float = 0.06      # PS: per-merged-variant compute tax
+    seed: int = 0
+
+
+@dataclass
+class Instance:
+    iid: int
+    block_id: str
+    device: int
+    busy: bool = False
+    queue: deque = field(default_factory=deque)  # (ready_time, request)
+    speculated: bool = False
+    countdowns: Dict[int, float] = field(default_factory=dict)  # rid -> eta
+    last_used: float = 0.0
+    loading_until: float = 0.0  # block swap-in completes at this time
+
+
+class Simulation:
+    def __init__(self, cfg: ServingConfig, sched: SchedulerConfig,
+                 cluster: Optional[Cluster] = None):
+        self.cfg = cfg
+        self.sched = sched
+        self.cluster = cluster or paper_cluster()
+        self.rng = np.random.RandomState(sched.seed)
+        self.instances: Dict[int, Instance] = {}
+        self.by_block: Dict[str, List[int]] = defaultdict(list)
+        # chain adjacency prior for locality placement (§5.3)
+        self.adjacency = set()
+        for c in cfg.chains.values():
+            for a, b in zip(c.blocks, c.blocks[1:]):
+                self.adjacency.add((a, b))
+                self.adjacency.add((b, a))
+        self._iid = itertools.count()
+        self._seq = itertools.count()
+        self.events: list = []
+        self.now = 0.0
+        # KV registry: (rid, block_id) -> (owner device, bytes)
+        self.kv_owner: Dict[Tuple[int, str], Tuple[int, int]] = {}
+        self.traffic: Dict[Tuple[str, str], float] = defaultdict(float)
+        self.done: List[Request] = []
+        self.stats = defaultdict(float)
+        self.spec_attempts = 0
+        self.spec_hits = 0
+
+    # -- placement ---------------------------------------------------------
+
+    def _placement_score(self, block_id: str, dev: int) -> float:
+        d = self.cluster.devices[dev]
+        if self.sched.placement == "fragmentation":
+            # pack: prefer the most-used device with room
+            return -d.free()
+        # locality: prefer servers hosting neighbours with high traffic,
+        # balanced against device load (O3: use idle silicon)
+        score = 0.0
+        total_t = 0.0
+        for other in self.instances.values():
+            key = (block_id, other.block_id)
+            t = self.traffic.get(key, 0.0) + self.traffic.get(key[::-1], 0.0)
+            if t <= 0 and key in self.adjacency:
+                t = 1.0  # static chain adjacency as prior
+            total_t += t
+            if t > 0 and d.server_id == \
+                    self.cluster.devices[other.device].server_id:
+                score += t
+        score = score / max(total_t, 1e-9)  # normalized locality in [0,1]
+        load = max(0.0, d.busy_until - self.now)  # pending compute seconds
+        return 2.0 * score + d.free() / d.memory - min(load, 5.0)
+
+    def _evict_one(self, protect_block: str) -> bool:
+        """Evict the least-recently-used idle instance (model switching —
+        the Fig. 5 overhead per-model provisioning pays constantly)."""
+        victims = [i for i in self.instances.values()
+                   if not i.busy and not i.queue
+                   and i.block_id != protect_block]
+        if not victims:
+            return False
+        v = min(victims, key=lambda i: i.last_used)
+        dev = self.cluster.devices[v.device]
+        size = dev.resident_blocks.pop(f"{v.block_id}#{v.iid}", 0)
+        self.by_block[v.block_id].remove(v.iid)
+        del self.instances[v.iid]
+        self.stats["evictions"] += 1
+        self.stats["switch_bytes"] += size
+        return True
+
+    def place_instance(self, block_id: str, *, evict: bool = True
+                       ) -> Optional[Instance]:
+        cost = self.cfg.blocks[block_id].cost
+        need = cost.param_bytes * 1.3
+        cands = [d for d in self.cluster.devices if d.free() >= need]
+        tries = 0
+        while not cands and evict and tries < 64:
+            if not self._evict_one(block_id):
+                break
+            tries += 1
+            cands = [d for d in self.cluster.devices if d.free() >= need]
+        if not cands:
+            return None
+        best = max(cands, key=lambda d: self._placement_score(block_id,
+                                                              d.device_id))
+        inst = Instance(next(self._iid), block_id, best.device_id)
+        best.resident_blocks[f"{block_id}#{inst.iid}"] = cost.param_bytes
+        # swap-in cost (paper §5.3 T_load / Fig 5 switching overhead)
+        load_t = cost.load_time()
+        inst.loading_until = self.now + load_t
+        inst.last_used = self.now
+        self.stats["switch_time"] += load_t
+        self.stats["switch_bytes"] += cost.param_bytes
+        self.instances[inst.iid] = inst
+        self.by_block[block_id].append(inst.iid)
+        return inst
+
+    def initial_placement(self):
+        for bid in self.cfg.blocks:
+            if not self.by_block[bid]:
+                self.place_instance(bid)
+
+    # -- dispatch (§5.3) ----------------------------------------------------
+
+    def _queue_time(self, inst: Instance) -> float:
+        cost = self.cfg.blocks[inst.block_id].cost
+        pend = len(inst.queue) + (1 if inst.busy else 0)
+        return pend * cost.compute_time(1, 1) * 4  # rough per-batch estimate
+
+    def candidates(self, req: Request, block_id: str) -> List[int]:
+        ids = list(self.by_block[block_id])
+        if self.sched.adaptive and self.sched.mode == "blockllm":
+            for eq in self.cfg.blocks[block_id].equivalents:
+                ids.extend(self.by_block[eq])
+        return ids
+
+    def dispatch(self, req: Request, block_id: str, from_dev: Optional[int]):
+        """Pick the target instance per §5.1/§5.3, account transfer time,
+        enqueue.  Returns the chosen instance."""
+        cands = self.candidates(req, block_id)
+        if not cands:
+            inst = self.place_instance(block_id)
+            if inst is None:  # no memory anywhere: queue on a busy peer
+                cands = [min(self.instances,
+                             key=lambda i: len(self.instances[i].queue))]
+            else:
+                cands = [inst.iid]
+        kv_key = (req.rid, block_id)
+        owner = self.kv_owner.get(kv_key)
+        decode = req.tokens_done > 0
+        cost = self.cfg.blocks[block_id].cost
+        kv_bytes = cost.kv_bytes_per_token * req.total_len
+        kv_flops = cost.flops_per_token * req.total_len
+        new_tok = TOKEN_BYTES
+        full_req = TOKEN_BYTES * req.total_len
+
+        best_iid, best_t, best_strategy = None, float("inf"), "fresh"
+        # best-effort: prioritize the KV owner when statuses are comparable
+        for iid in cands:
+            inst = self.instances[iid]
+            dev = inst.device
+            if from_dev is None:
+                t_transfer = new_tok / 12.5e9  # scheduler dispatch (§5.3)
+            elif decode and owner is not None:
+                if dev == owner[0]:
+                    t_transfer = t_revisit_owner(
+                        self.cluster, from_dev, dev, new_tok, kv_bytes)
+                    if self.sched.kv_policy == "owner":
+                        t_transfer *= 0.25  # owner-priority boost (best-effort)
+                else:
+                    if self.sched.kv_policy == "recalc":
+                        t_transfer = full_req / self.cluster.bw(from_dev, dev) \
+                            + kv_flops / 197e12
+                    else:
+                        t_transfer, _ = best_kv_strategy(
+                            self.cluster, from_dev, owner[0], dev, new_tok,
+                            full_req, kv_bytes, kv_flops)
+            else:
+                t_transfer = new_tok / self.cluster.bw(from_dev, dev) \
+                    if from_dev != dev else 0.0
+            t = estimate_latency(
+                self.cluster, queue_compute_time=self._queue_time(inst),
+                compute_time=cost.compute_time(1, 1), transfer_time=t_transfer,
+                device_idle=not inst.busy, evict_bytes=0, load_bytes=0)
+            if self.sched.kv_policy == "least-busy":
+                t = self._queue_time(inst)  # ignore KV locality (Fig 21 ablation)
+            if t < best_t:
+                best_iid, best_t, best_strategy = iid, t, None
+        inst = self.instances[best_iid]
+        if inst.block_id != block_id:
+            req.adaptive_hops += 1
+        # transfer accounting
+        if from_dev is not None:
+            dev = inst.device
+            if decode and owner is not None and dev != owner[0] and \
+                    self.sched.kv_policy != "least-busy":
+                t_tr, strat = best_kv_strategy(
+                    self.cluster, from_dev, owner[0], dev, new_tok, full_req,
+                    kv_bytes, kv_flops)
+                if self.sched.kv_policy == "recalc":
+                    t_tr = full_req / self.cluster.bw(from_dev, dev) \
+                        + kv_flops / 197e12
+                self.kv_owner[kv_key] = (dev, kv_bytes)
+            elif decode and owner is not None and dev == owner[0]:
+                t_tr = t_revisit_owner(self.cluster, from_dev, dev, new_tok,
+                                       kv_bytes / 8)  # hot cache
+            else:
+                t_tr = new_tok / self.cluster.bw(from_dev, dev) \
+                    if from_dev != dev else 0.0
+                self.kv_owner[kv_key] = (dev, kv_bytes)
+            req.transfer_time += t_tr
+            self.stats["transfer_time"] += t_tr
+            if from_dev != dev:
+                self.stats["hops"] += 1
+                if not self.cluster.same_server(from_dev, dev):
+                    self.stats["inter_server_hops"] += 1
+            ready = self.now + t_tr
+            # locality traffic counter (§5.3)
+            prev_inst = next((i for i in self.instances.values()
+                              if i.device == from_dev), None)
+            if prev_inst is not None:
+                self.traffic[(prev_inst.block_id, inst.block_id)] += \
+                    new_tok + (kv_bytes if dev != from_dev else 0)
+        else:
+            ready = self.now + new_tok / 12.5e9
+        self.kv_owner.setdefault(kv_key, (inst.device, kv_bytes))
+        ready = max(ready, inst.loading_until)
+        inst.last_used = self.now
+        inst.queue.append((ready, req))
+        heapq.heappush(self.events,
+                       (ready, next(self._seq), "enqueue", (inst.iid, req)))
+        return inst
+
+    # -- instance service loop ----------------------------------------------
+
+    def _form_batch(self, inst: Instance) -> List[Request]:
+        """FIFO + priority for returning KV owners (countdown, §6)."""
+        ready = [i for i, (rt, r) in enumerate(inst.queue) if rt <= self.now]
+        if not ready:
+            return []
+        idxs = sorted(
+            ready,
+            key=lambda i: (0 if inst.queue[i][1].rid in inst.countdowns else 1,
+                           inst.queue[i][0]))
+        take = idxs[: self.sched.max_batch]
+        batch = [inst.queue[i][1] for i in take]
+        for i in sorted(take, reverse=True):
+            del inst.queue[i]
+        return batch
+
+    def _service(self, inst: Instance):
+        if inst.busy:
+            return
+        batch = self._form_batch(inst)
+        if not batch:
+            return
+        inst.busy = True
+        inst.last_used = self.now
+        cost = self.cfg.blocks[inst.block_id].cost
+        tokens = sum(r.prompt_len if r.tokens_done == 0 else 1 for r in batch)
+        ctx = max(r.total_len for r in batch)
+        t_c = cost.compute_time(len(batch), max(1, tokens // len(batch)), ctx)
+        chain = self.cfg.chains[batch[0].app]
+        if self.sched.mode == "ps" and chain.branching > 1:
+            t_c *= 1.0 + self.sched.branching_overhead * (chain.branching - 1)
+        dev = self.cluster.devices[inst.device]
+        # device-level serialization: one compute stream per chip
+        t_start = max(self.now, dev.busy_until)
+        t_end = t_start + t_c
+        dev.busy_until = t_end
+        dev.busy_time += t_c
+        dev.useful_flop_time += cost.useful_time(len(batch),
+                                                 max(1, tokens // len(batch)))
+        for r in batch:
+            r.compute_time += t_c
+            r.queue_time += t_start - self.now
+            if r.t_start is None:
+                r.t_start = self.now
+        # speculation (§5.2): downstream handoff can begin at t_surrogate
+        handoff = t_end
+        if inst.speculated and self.sched.speculation:
+            self.spec_attempts += len(batch)
+            t_sur = t_c / self.sched.spec_speedup
+            ok = self.rng.random() < self.sched.spec_accuracy
+            if ok:
+                self.spec_hits += len(batch)
+                handoff = t_start + t_sur + 0.1 * (t_c - t_sur)
+            dev.busy_time += t_sur  # surrogate occupies a parallel stream
+        heapq.heappush(self.events, (t_end, next(self._seq),
+                                     "service_done", (inst.iid, batch, handoff)))
+
+    def _advance(self, req: Request, inst: Instance, handoff_time: float):
+        chain = self.cfg.chains[req.app]
+        req.hop += 1
+        if req.hop >= len(chain.blocks):
+            req.hop = 0
+            if req.tokens_done == 0:
+                req.tokens_done = 1  # prefill produced the first token
+            else:
+                req.tokens_done += 1
+            if req.tokens_done >= req.gen_len:
+                req.t_done = handoff_time
+                self.done.append(req)
+                for key in list(self.kv_owner):
+                    if key[0] == req.rid:
+                        del self.kv_owner[key]
+                return
+            inst.countdowns[req.rid] = handoff_time + 0.05
+        nxt = chain.blocks[req.hop]
+        self.now_save = self.now
+        self.now = handoff_time
+        self.dispatch(req, nxt, inst.device)
+        self.now = self.now_save
+
+    # -- scaling + speculation refresh (§5.3) --------------------------------
+
+    def _rescale(self):
+        # scale out hot blocks
+        for bid, iids in list(self.by_block.items()):
+            qlen = sum(len(self.instances[i].queue) for i in iids)
+            if qlen > self.sched.scale_queue_threshold:
+                self.place_instance(bid)
+        # refresh speculation set: top-k by queue completion time, skipping
+        # chain-final blocks and consecutive positions (§5.2)
+        if not self.sched.speculation or self.sched.mode != "blockllm":
+            return
+        final_blocks = {c.blocks[-1] for c in self.cfg.chains.values()}
+        load = sorted(self.instances.values(),
+                      key=lambda i: -(len(i.queue)))
+        k = max(1, int(len(self.instances) * self.sched.spec_top_frac))
+        chosen = set()
+        chain_pos = {}
+        for c in self.cfg.chains.values():
+            for pos, b in enumerate(c.blocks):
+                chain_pos.setdefault(b, pos)
+        for inst in load:
+            if len(chosen) >= k:
+                break
+            if inst.block_id in final_blocks:
+                continue
+            pos = chain_pos.get(inst.block_id, 0)
+            if any(chain_pos.get(self.instances[c].block_id, -9) in
+                   (pos - 1, pos + 1) for c in chosen):
+                continue  # no consecutive speculation
+            chosen.add(inst.iid)
+        for inst in self.instances.values():
+            inst.speculated = inst.iid in chosen
+
+    # -- main loop -----------------------------------------------------------
+
+    def run(self, requests: List[Request], until: float = 1e9) -> dict:
+        self.initial_placement()
+        for r in requests:
+            heapq.heappush(self.events, (r.arrival, next(self._seq),
+                                         "arrival", r))
+        next_rescale = 1.0
+        while self.events:
+            t, _, kind, payload = heapq.heappop(self.events)
+            self.now = max(self.now, t)
+            if self.now > until:
+                break
+            while self.now >= next_rescale:
+                self._rescale()
+                next_rescale += self.sched.rescale_period
+            if kind == "arrival":
+                req: Request = payload
+                self.dispatch(req, self.cfg.chains[req.app].blocks[0], None)
+            elif kind == "enqueue":
+                iid, req = payload
+                self._service(self.instances[iid])
+            elif kind == "service_done":
+                iid, batch, handoff = payload
+                inst = self.instances[iid]
+                inst.busy = False
+                for r in batch:
+                    inst.countdowns.pop(r.rid, None)
+                    self._advance(r, inst, handoff)
+                self._service(inst)
+        return self.metrics()
+
+    # -- metrics (§7.1) -------------------------------------------------------
+
+    def metrics(self) -> dict:
+        lats = sorted(r.latency() for r in self.done)
+        if not lats:
+            return {"completed": 0}
+        span = max(r.t_done for r in self.done) - min(r.arrival for r in self.done)
+        tokens = sum(r.gen_len for r in self.done)
+        busy = sum(d.busy_time for d in self.cluster.devices)
+        useful = sum(d.useful_flop_time for d in self.cluster.devices)
+        wall = span * len(self.cluster.devices)
+        comm = self.stats["transfer_time"]
+        return {
+            "completed": len(self.done),
+            "median_latency": lats[len(lats) // 2],
+            "p95_latency": lats[int(len(lats) * 0.95)],
+            "mean_latency": float(np.mean(lats)),
+            "throughput_tokens_s": tokens / max(span, 1e-9),
+            "gpu_utilization": busy / max(wall, 1e-9),
+            "sm_efficiency": useful / max(busy, 1e-9),
+            "communication_s": comm,
+            "inter_server_frac": self.stats["inter_server_hops"]
+            / max(self.stats["hops"], 1),
+            "adaptive_served": sum(1 for r in self.done if r.adaptive_hops),
+            "spec_attempts": self.spec_attempts,
+            "spec_hits": self.spec_hits,
+        }

@@ -1,0 +1,69 @@
+"""Equivalence metrics (paper §4.1, Figs. 3 & 10)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.equivalence import (
+    cross_size_equivalence,
+    param_equivalence,
+    vocab_probability_similarity,
+)
+from repro.models.model import build_model
+
+
+def test_param_equivalence_identity():
+    cfg = get_config("blockllm-demo")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    layer0 = jax.tree.map(lambda x: x[0], params["layers"])
+    assert abs(param_equivalence(layer0, layer0) - 1.0) < 1e-6
+
+
+def test_param_equivalence_perturbation_monotone():
+    """Fine-tuning-sized perturbations keep cos ~0.99 (paper Fig. 3);
+    unrelated weights are near 0."""
+    cfg = get_config("blockllm-demo")
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    layer0 = jax.tree.map(lambda x: x[0], params["layers"])
+    small = jax.tree.map(
+        lambda x: x + 0.05 * jnp.std(x) * jax.random.normal(
+            jax.random.PRNGKey(1), x.shape, x.dtype), layer0)
+    big = jax.tree.map(
+        lambda x: jnp.std(x) * jax.random.normal(
+            jax.random.PRNGKey(2), x.shape, x.dtype), layer0)
+    eq_small = param_equivalence(layer0, small)
+    eq_big = param_equivalence(layer0, big)
+    assert eq_small > 0.99
+    assert eq_big < 0.2
+    assert eq_small > eq_big
+
+
+def test_param_equivalence_structural_mismatch():
+    cfg_a = get_config("blockllm-demo")
+    cfg_b = get_config("blockllm-demo-large")
+    pa = build_model(cfg_a).init(jax.random.PRNGKey(0))
+    pb = build_model(cfg_b).init(jax.random.PRNGKey(0))
+    la = jax.tree.map(lambda x: x[0], pa["layers"])
+    lb = jax.tree.map(lambda x: x[0], pb["layers"])
+    assert param_equivalence(la, lb) == 0.0  # cosine inapplicable -> §4.1 path 2
+
+
+def test_vocab_probability_similarity_bounds():
+    p = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(0), (2, 4, 32)), -1)
+    assert abs(vocab_probability_similarity(p, p) - 1.0) < 1e-6
+    q = jax.nn.softmax(10 * jax.random.normal(jax.random.PRNGKey(1), (2, 4, 32)), -1)
+    assert vocab_probability_similarity(p, q) < 1.0
+
+
+def test_cross_size_equivalence_runs():
+    """Different-embedding-size probe (Fig. 10).  Random init models share a
+    vocabulary; the metric must be finite and in [0, 1]."""
+    cfg_a = get_config("blockllm-demo")
+    cfg_b = get_config("blockllm-demo-large")
+    ma, mb = build_model(cfg_a), build_model(cfg_b)
+    pa = ma.init(jax.random.PRNGKey(0))
+    pb = mb.init(jax.random.PRNGKey(1))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                cfg_a.vocab_size)
+    eq = cross_size_equivalence(ma, pa, cfg_a, mb, pb, cfg_b, tokens)
+    assert 0.0 <= eq <= 1.0

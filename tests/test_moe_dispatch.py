@@ -1,0 +1,40 @@
+"""Capacity-dispatch MoE == dense-scan MoE when capacity is lossless."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models.model import build_model
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x22b", "dbrx-132b"])
+def test_dispatch_matches_dense_when_lossless(arch):
+    cfg_dense = get_reduced_config(arch)
+    # capacity_factor = E/k guarantees zero drops -> exact equivalence
+    cf = cfg_dense.num_experts / cfg_dense.num_experts_per_tok
+    cfg_disp = cfg_dense.replace(moe_impl="dispatch", capacity_factor=cf)
+    model_d = build_model(cfg_dense)
+    model_p = build_model(cfg_disp)
+    params = model_d.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg_dense.vocab_size)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+    l_dense = float(jax.jit(lambda p, b: model_d.train_loss(p, b))(params, batch))
+    l_disp = float(jax.jit(lambda p, b: model_p.train_loss(p, b))(params, batch))
+    np.testing.assert_allclose(l_dense, l_disp, rtol=3e-2, atol=3e-2)
+
+
+def test_dropped_fraction_monotone_in_capacity():
+    from repro.models.moe_dispatch import dropped_fraction
+
+    cfg = get_reduced_config("mixtral-8x22b")
+    rng = jax.random.PRNGKey(2)
+    logits = jax.random.normal(rng, (2, 32, cfg.num_experts))
+    top, idx = jax.lax.top_k(logits, cfg.num_experts_per_tok)
+    onehot = jax.nn.one_hot(idx, cfg.num_experts)
+    combine = jnp.einsum("bsk,bske->bse", jax.nn.softmax(top, -1), onehot)
+    d_small = float(dropped_fraction(combine, cfg.replace(capacity_factor=0.5)))
+    d_big = float(dropped_fraction(combine, cfg.replace(capacity_factor=4.0)))
+    assert d_big <= d_small
+    assert d_big == 0.0

@@ -1,0 +1,74 @@
+"""Stitching blocks (paper §4.3, Table 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.stitching import (
+    apply_stitch,
+    make_stitch_block,
+    stitched_head_similarity,
+    train_stitching_block,
+)
+from repro.models.model import build_model
+
+
+@pytest.fixture(scope="module")
+def two_models():
+    cfg_a = get_config("blockllm-demo")        # d=256
+    cfg_b = get_config("blockllm-demo-large")  # d=384
+    pa = build_model(cfg_a).init(jax.random.PRNGKey(0))
+    pb = build_model(cfg_b).init(jax.random.PRNGKey(1))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (4, 32), 0,
+                                cfg_a.vocab_size)
+    return cfg_a, pa, cfg_b, pb, tokens
+
+
+def test_train_stitch_reduces_loss(two_models):
+    cfg_a, pa, cfg_b, pb, tokens = two_models
+    w, losses = train_stitching_block(
+        pa, cfg_a, pb, cfg_b, [(1, 2), (2, 3)], tokens, steps_per_point=60)
+    assert w.shape == (cfg_a.d_model + 1, cfg_b.d_model)
+    # loss must improve over an untrained stitch at the deepest point
+    w0 = 0.02 * jax.random.normal(jax.random.PRNGKey(9), w.shape)
+    from repro.core.stitching import _hidden_at_layer
+
+    h_a = _hidden_at_layer(pa, cfg_a, tokens, 2)
+    h_b = _hidden_at_layer(pb, cfg_b, tokens, 3)
+
+    def mse(w_):
+        pred = apply_stitch(w_, h_a, 5.0)
+        return float(jnp.mean(jnp.square(
+            pred.astype(jnp.float32) - h_b.astype(jnp.float32))))
+
+    assert mse(w) < 0.5 * mse(w0)
+
+
+def test_stitched_head_similarity(two_models):
+    """Table 3 analogue: stitched small->large model vs the large model."""
+    cfg_a, pa, cfg_b, pb, tokens = two_models
+    w, _ = train_stitching_block(pa, cfg_a, pb, cfg_b, [(2, 3)], tokens,
+                                 steps_per_point=100)
+    sim = stitched_head_similarity(pa, cfg_a, pb, cfg_b, w, (2, 3), tokens)
+    assert 0.0 <= sim <= 1.0
+    # must beat an untrained stitch
+    w0 = 0.02 * jax.random.normal(jax.random.PRNGKey(8), w.shape)
+    sim0 = stitched_head_similarity(pa, cfg_a, pb, cfg_b, w0, (2, 3), tokens)
+    assert sim > sim0
+
+
+def test_stitch_block_in_zoo(two_models):
+    cfg_a, pa, cfg_b, pb, tokens = two_models
+    from repro.core.blocks import apply_block
+    from repro.core.zoo import BlockZoo
+
+    w = 0.02 * jax.random.normal(jax.random.PRNGKey(3),
+                                 (cfg_a.d_model + 1, cfg_b.d_model))
+    blk = make_stitch_block(w, "a", "b", cfg_a.d_model, cfg_b.d_model, 4.0)
+    zoo = BlockZoo()
+    zoo.add_stitch(blk)
+    assert (cfg_a.d_model, cfg_b.d_model) in zoo.stitches
+    h = jax.random.normal(jax.random.PRNGKey(4), (2, 8, cfg_a.d_model))
+    out = apply_block(blk, h)
+    assert out.shape == (2, 8, cfg_b.d_model)
