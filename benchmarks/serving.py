@@ -1,0 +1,121 @@
+"""Continuous-batching serving benchmark (DESIGN.md §7).
+
+Decode tokens/sec for N mixed-app requests served through the
+continuous-batching BlockEngine (one submit-all + drain) versus sequential
+per-request ``generate()`` calls on an identical engine.  Both paths run
+the same paged-KV numerics; the delta is cross-request batching on shared
+blocks.  Emits ``BENCH_serving.json``.
+
+    PYTHONPATH=src:. python benchmarks/serving.py --requests 8 --gen-len 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def build(args):
+    from repro.serving.demo import build_demo_zoo
+    from repro.serving.engine import BlockEngine, EngineConfig
+
+    cfg, _, zoo = build_demo_zoo(seed=0)
+    max_len = args.prompt_len + args.gen_len
+    engine = BlockEngine(zoo, max_len=max_len,
+                         config=EngineConfig(max_active=args.requests))
+    return cfg, zoo, engine
+
+
+def make_requests(cfg, zoo, args, seed=0):
+    from repro.serving.api import ServeRequest
+
+    rng = np.random.RandomState(seed)
+    apps = list(zoo.chains)
+    return [ServeRequest(
+        app=apps[i % len(apps)], gen_len=args.gen_len,
+        prompt_tokens=rng.randint(0, cfg.vocab_size, size=args.prompt_len)
+        .astype(np.int32)) for i in range(args.requests)]
+
+
+def bench_batched(cfg, zoo, engine, args, seed):
+    reqs = make_requests(cfg, zoo, args, seed)
+    t0 = time.perf_counter()
+    for r in reqs:
+        engine.submit(r)
+    results = engine.drain()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.tokens) for r in results)
+    return toks, dt, results
+
+
+def bench_sequential(cfg, zoo, engine, args, seed):
+    reqs = make_requests(cfg, zoo, args, seed)
+    t0 = time.perf_counter()
+    results = []
+    for r in reqs:
+        res = engine.generate(zoo.chains[r.app], r.prompt_tokens[None],
+                              r.gen_len)
+        results.append(res)
+    dt = time.perf_counter() - t0
+    toks = sum(r.tokens.shape[1] for r in results)
+    return toks, dt, results
+
+
+def run(requests: int = 8, gen_len: int = 32, prompt_len: int = 16):
+    """Harness entry: rows for benchmarks.run (name, value, derived)."""
+    args = argparse.Namespace(requests=requests, gen_len=gen_len,
+                              prompt_len=prompt_len)
+    report = _measure(args)
+    return [
+        ("serving/batched_tokens_per_s", report["batched_tokens_per_s"],
+         f"N={requests}"),
+        ("serving/sequential_tokens_per_s",
+         report["sequential_tokens_per_s"], f"N={requests}"),
+        ("serving/speedup", report["speedup"], "target>=1.5"),
+    ]
+
+
+def _measure(args) -> dict:
+    cfg, zoo, engine = build(args)
+    seq_engine = build(args)[2]
+    # warmup: trace/compile every block fn at both group widths
+    bench_batched(cfg, zoo, engine, args, seed=123)
+    warm = argparse.Namespace(**{**vars(args), "requests": 1})
+    bench_sequential(cfg, zoo, seq_engine, warm, seed=123)
+
+    b_toks, b_dt, _ = bench_batched(cfg, zoo, engine, args, seed=0)
+    s_toks, s_dt, _ = bench_sequential(cfg, zoo, seq_engine, args, seed=0)
+    b_tps = b_toks / max(b_dt, 1e-9)
+    s_tps = s_toks / max(s_dt, 1e-9)
+    return {
+        "concurrency": args.requests,
+        "gen_len": args.gen_len,
+        "prompt_len": args.prompt_len,
+        "batched_tokens": b_toks,
+        "batched_wall_s": round(b_dt, 4),
+        "batched_tokens_per_s": round(b_tps, 2),
+        "sequential_tokens": s_toks,
+        "sequential_wall_s": round(s_dt, 4),
+        "sequential_tokens_per_s": round(s_tps, 2),
+        "speedup": round(b_tps / max(s_tps, 1e-9), 3),
+        "engine_stats": dict(engine.stats),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+    report = _measure(args)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(json.dumps(report, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,18 +1,19 @@
-"""End-to-end driver: serve a small multi-tenant model zoo with batched
-requests — real JAX prefill/decode through chains of blocks, plus the
-cluster-scale evaluation of the same scheduler on the paper's 12-device
-cluster.
+"""End-to-end driver: serve a small multi-tenant model zoo through the
+unified Server API — continuous-batching real JAX execution (shared paged
+KV pool, cross-app batching) plus the cluster-scale discrete-event
+evaluation of the same scheduler on the paper's 12-device cluster.
 
     PYTHONPATH=src python examples/serve_multitenant.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.api import ServeRequest
+from repro.serving.demo import build_demo_zoo
 from repro.serving.engine import BlockEngine, adaptive_serving_similarity
-from repro.serving.request import generate_trace
+from repro.serving.request import as_serve_requests, generate_trace
 from repro.serving.simulator import (
     SchedulerConfig,
     Simulation,
@@ -20,45 +21,30 @@ from repro.serving.simulator import (
 )
 
 
-def build_zoo():
-    from repro.configs import get_config
-    from repro.core import peft
-    from repro.core.zoo import BlockZoo
-    from repro.models.model import build_model
-
-    cfg = get_config("blockllm-demo")
-    params = build_model(cfg).init(jax.random.PRNGKey(0))
-    zoo = BlockZoo()
-    zoo.register_foundation("base", cfg, params)
-    ft = dict(params)
-    noisy = jax.tree.map(
-        lambda x: x + 0.15 * jnp.std(x) * jax.random.normal(
-            jax.random.PRNGKey(1), x.shape, x.dtype),
-        jax.tree.map(lambda x: x[1], params["layers"]))
-    ft["layers"] = jax.tree.map(
-        lambda full, rep: full.at[1].set(rep), params["layers"], noisy)
-    zoo.register_fpft("vicuna", cfg, ft, "base")
-    zoo.register_peft("chatbot", cfg, "base", "lora",
-                      peft.create_lora(cfg, jax.random.PRNGKey(2)))
-    return cfg, zoo
-
-
 def main():
-    # ---- real execution: batched requests from three tenants ----
-    cfg, zoo = build_zoo()
-    engine = BlockEngine(zoo)
-    rng = jax.random.PRNGKey(7)
-    for app in ("base", "vicuna", "chatbot"):
-        prompts = jax.random.randint(rng, (4, 24), 0, cfg.vocab_size)
-        t0 = time.perf_counter()
-        res = engine.generate(zoo.chains[app], prompts, gen_len=8)
-        dt = time.perf_counter() - t0
-        print(f"[{app:8s}] batch=4 prompt=24 gen=8 -> tokens {res.tokens.shape}"
-              f" in {dt:.2f}s  sample={res.tokens[0][:6].tolist()}")
+    # ---- real execution: continuous batching across three tenants ----
+    cfg, _, zoo = build_demo_zoo(seed=0)
+    engine = BlockEngine(zoo, max_len=64)
+    rng = np.random.RandomState(7)
+    apps = ("base", "vicuna", "app-lora")
+    for i in range(12):  # 12 in-flight requests, mixed apps
+        prompt = rng.randint(0, cfg.vocab_size, size=24).astype(np.int32)
+        engine.submit(ServeRequest(app=apps[i % 3], gen_len=8,
+                                   prompt_tokens=prompt))
+    t0 = time.perf_counter()
+    results = engine.drain()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.tokens) for r in results)
+    print(f"continuous batching: {len(results)} reqs x 3 apps -> {toks} "
+          f"tokens in {dt:.2f}s ({toks / dt:.1f} tok/s, "
+          f"{engine.stats['group_calls']} batched block calls)")
+    for r in sorted(results, key=lambda r: r.rid)[:3]:
+        print(f"  [{r.app:8s}] rid={r.rid} sample={r.tokens[:6].tolist()}")
 
     sim, n = adaptive_serving_similarity(
         zoo, engine, "vicuna",
-        jax.random.randint(rng, (4, 24), 0, cfg.vocab_size), gen_len=6)
+        np.asarray(jax.random.randint(jax.random.PRNGKey(7), (4, 24), 0,
+                                      cfg.vocab_size)), gen_len=6)
     print(f"adaptive serving  : {n} block(s) swapped, output prob cosine "
           f"{sim:.3f} (paper Fig. 20: 0.88)")
 
@@ -69,7 +55,11 @@ def main():
         trace = generate_trace(list(scfg.chains), total_requests=400,
                                duration_s=600, seed=0,
                                prompt_len=(64, 512), gen_len=(64, 256))
-        m = Simulation(scfg, SchedulerConfig(mode=mode)).run(trace)
+        server = Simulation(scfg, SchedulerConfig(mode=mode))
+        for req in as_serve_requests(trace):
+            server.submit(req)
+        server.drain()
+        m = server.metrics()
         print(f"  {mode:9s} median={m['median_latency']:6.1f}s "
               f"p95={m['p95_latency']:6.1f}s "
               f"thpt={m['throughput_tokens_s']:6.1f} tok/s "

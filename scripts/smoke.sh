@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Smoke tier: fast tests (slow-marked ones excluded) + the serving
+# benchmark, which writes BENCH_serving.json at the repo root.  The
+# benchmark runs even when tests fail; the test status is still the
+# script's exit code.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH=src python -m pytest -q -m "not slow" "$@"
+status=$?
+PYTHONPATH=src:. python benchmarks/serving.py --out BENCH_serving.json
+exit "$status"

@@ -146,14 +146,17 @@ def apply_block(block: Block, x, *, positions=None, adapters=()):
 # ---------------------------------------------------------------------------
 
 
-def block_prefill(block: Block, x, *, positions=None, adapters=(),
-                  max_len=None):
-    """Like apply_block, but attention-bearing blocks also return their KV
-    cache (dict) for subsequent block_decode calls."""
+def block_prefill_raw(block: Block, x, *, positions=None, adapters=()):
+    """Prefill one block, returning the raw rotated K and V alongside the
+    output (``(out, k_r, v)``; ``k_r``/``v`` are ``None`` for blocks without
+    attention state).  The paged serving engine scatters the raw K/V into its
+    shared page pool; ``block_prefill`` wraps this with the dense ring-buffer
+    cache layout instead."""
     cfg = block.cfg
     p = block.params
     if block.kind not in ("layer", "attention"):
-        return apply_block(block, x, positions=positions, adapters=adapters), None
+        out = apply_block(block, x, positions=positions, adapters=adapters)
+        return out, None, None
     B, S = x.shape[:2]
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
@@ -168,10 +171,20 @@ def block_prefill(block: Block, x, *, positions=None, adapters=(),
                            window=cfg.sliding_window)
     o = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(h.dtype))
     out = x + o
-    cache = L.finalize_prefill_cache(k_r, v, cfg, max_len)
     if block.kind == "layer":
         out = _ffn_sublayer(out, p, cfg, adapters)
-    return out, cache
+    return out, k_r, v
+
+
+def block_prefill(block: Block, x, *, positions=None, adapters=(),
+                  max_len=None):
+    """Like apply_block, but attention-bearing blocks also return their KV
+    cache (dict) for subsequent block_decode calls."""
+    out, k_r, v = block_prefill_raw(block, x, positions=positions,
+                                    adapters=adapters)
+    if k_r is None:
+        return out, None
+    return out, L.finalize_prefill_cache(k_r, v, block.cfg, max_len)
 
 
 def block_decode(block: Block, x, cache, kv_len, *, adapters=()):
@@ -201,6 +214,47 @@ def block_decode(block: Block, x, cache, kv_len, *, adapters=()):
     if block.kind == "layer":
         out = _ffn_sublayer(out, p, cfg, adapters)
     return out, cache
+
+
+def block_decode_paged(block: Block, x, k_pages, v_pages, block_tables,
+                       kv_len, *, adapters=(), attn_impl: str = "auto"):
+    """One-token step over a shared paged KV pool (DESIGN.md §2).
+
+    x: (B, 1, D) hidden states (or token ids for embed blocks);
+    k_pages/v_pages: (P, page_size, KVH, hd) pool slabs; block_tables:
+    (B, n) page ids per sequence; kv_len: (B,) tokens already cached.
+
+    Writes the new token's K/V into the pool and attends over the pages via
+    the paged-attention kernel (Pallas on TPU, jnp oracle elsewhere).
+    Returns (out, k_pages, v_pages).
+    """
+    cfg = block.cfg
+    p = block.params
+    if block.kind not in ("layer", "attention"):
+        return (apply_block(block, x, adapters=adapters), k_pages, v_pages)
+    from repro.kernels.paged_attention.ops import (
+        paged_attention,
+        write_token_to_pages,
+    )
+
+    positions = kv_len[:, None]
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(h.dtype))
+    q, k, v = _peft_qkv(h, q, k, v, adapters)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    k_pages, v_pages = write_token_to_pages(
+        k_pages, v_pages, block_tables, kv_len, k[:, 0], v[:, 0])
+    o = paged_attention(q[:, 0], k_pages, v_pages, block_tables, kv_len + 1,
+                        impl=attn_impl)
+    o = jnp.einsum("bhk,hkd->bd", o.astype(x.dtype),
+                   p["wo"].astype(x.dtype))[:, None]
+    out = x + o
+    if block.kind == "layer":
+        out = _ffn_sublayer(out, p, cfg, adapters)
+    return out, k_pages, v_pages
 
 
 def _peft_qkv(h, q, k, v, adapters):

@@ -1,29 +1,26 @@
-"""Serving launcher: the paper's §7 evaluation on the 12-device cluster.
+"""Serving launcher over the unified Server API (DESIGN.md §2).
 
-    PYTHONPATH=src python -m repro.launch.serve --mode blockllm --apps 20
+Two backends, one interface (submit / step / drain):
+
+    # paper §7 evaluation on the modeled 12-device cluster
+    PYTHONPATH=src python -m repro.launch.serve --backend sim --apps 20
+
+    # real JAX execution: continuous batching on the laptop-scale demo zoo
+    PYTHONPATH=src python -m repro.launch.serve --backend real --requests 8
+
+Scheduler flags are generated straight from ``SchedulerConfig`` fields
+(``SchedulerConfig.add_args`` — one source of truth, no hand-copied
+argparse declarations).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import time
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="blockllm",
-                    choices=["blockllm", "pm", "ps"])
-    ap.add_argument("--apps", type=int, default=20)
-    ap.add_argument("--requests", type=int, default=400)
-    ap.add_argument("--duration", type=float, default=600.0)
-    ap.add_argument("--no-adaptive", action="store_true")
-    ap.add_argument("--no-speculation", action="store_true")
-    ap.add_argument("--kv-policy", default="owner",
-                    choices=["owner", "recalc", "least-busy"])
-    ap.add_argument("--placement", default="locality",
-                    choices=["locality", "fragmentation"])
-    args = ap.parse_args()
-
-    from repro.serving.request import generate_trace
+def run_sim(args) -> dict:
+    from repro.serving.request import as_serve_requests, generate_trace
     from repro.serving.simulator import (
         SchedulerConfig,
         Simulation,
@@ -35,11 +32,63 @@ def main():
     trace = generate_trace(list(cfg.chains), total_requests=args.requests,
                            duration_s=args.duration, seed=0,
                            prompt_len=(64, 512), gen_len=(64, 256))
-    sched = SchedulerConfig(
-        mode=args.mode, adaptive=not args.no_adaptive,
-        speculation=not args.no_speculation, kv_policy=args.kv_policy,
-        placement=args.placement)
-    metrics = Simulation(cfg, sched).run(trace)
+    server = Simulation(cfg, SchedulerConfig.from_args(args))
+    for req in as_serve_requests(trace):
+        server.submit(req)
+    results = server.drain()
+    metrics = server.metrics()
+    metrics["completed_via_api"] = len(results)
+    return metrics
+
+
+def run_real(args) -> dict:
+    import numpy as np
+
+    from repro.serving.api import ServeRequest
+    from repro.serving.demo import build_demo_zoo
+    from repro.serving.engine import BlockEngine, EngineConfig
+
+    cfg, _, zoo = build_demo_zoo(seed=0)
+    engine = BlockEngine(zoo, max_len=args.max_len,
+                         config=EngineConfig(max_active=args.max_batch))
+    apps = list(zoo.chains)
+    rng = np.random.RandomState(0)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        prompt = rng.randint(0, cfg.vocab_size,
+                             size=int(rng.randint(8, 24))).astype(np.int32)
+        engine.submit(ServeRequest(app=apps[i % len(apps)],
+                                   gen_len=args.gen_len,
+                                   prompt_tokens=prompt))
+    results = engine.drain()
+    dt = time.perf_counter() - t0
+    gen_tokens = sum(len(r.tokens) for r in results)
+    return {
+        "completed": len(results),
+        "generated_tokens": gen_tokens,
+        "wall_s": round(dt, 3),
+        "tokens_per_s": round(gen_tokens / max(dt, 1e-9), 2),
+        "engine_stats": dict(engine.stats),
+        "sample": results[0].tokens[:8].tolist() if results else [],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="sim", choices=["sim", "real"])
+    # workload knobs
+    ap.add_argument("--apps", type=int, default=20)
+    ap.add_argument("--requests", type=int, default=400)
+    ap.add_argument("--duration", type=float, default=600.0)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=64)
+    # scheduler knobs: generated from the dataclass, shared with the sim
+    from repro.serving.simulator import SchedulerConfig
+
+    SchedulerConfig.add_args(ap)
+    args = ap.parse_args()
+
+    metrics = run_sim(args) if args.backend == "sim" else run_real(args)
     print(json.dumps({k: (round(v, 4) if isinstance(v, float) else v)
                       for k, v in metrics.items()}, indent=1))
 

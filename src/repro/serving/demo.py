@@ -1,0 +1,36 @@
+"""Laptop-scale demo zoo shared by the launcher, examples, benchmarks and
+tests: one foundation, one FPFT variant (divergent layer with an adaptive
+equivalence edge) and PEFT variants over the foundation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def build_demo_zoo(seed: int = 0, *, peft_kinds=("lora",)):
+    """Returns (cfg, params, zoo) with apps: base, vicuna, app-<peft>..."""
+    from repro.configs import get_config
+    from repro.core import peft
+    from repro.core.zoo import BlockZoo
+    from repro.models.model import build_model
+
+    cfg = get_config("blockllm-demo")
+    params = build_model(cfg).init(jax.random.PRNGKey(seed))
+    zoo = BlockZoo()
+    zoo.register_foundation("base", cfg, params)
+    # FPFT variant: perturb one layer enough to stay its own block but keep
+    # an adaptive-serving equivalence edge (cos ~ 1 - sigma^2/2)
+    ft = dict(params)
+    noisy = jax.tree.map(
+        lambda x: x + 0.15 * jnp.std(x) * jax.random.normal(
+            jax.random.PRNGKey(seed + 1), x.shape, x.dtype),
+        jax.tree.map(lambda x: x[1], params["layers"]))
+    ft["layers"] = jax.tree.map(
+        lambda full, rep: full.at[1].set(rep), params["layers"], noisy)
+    zoo.register_fpft("vicuna", cfg, ft, "base")
+    makers = {"lora": peft.create_lora, "adapter": peft.create_adapter,
+              "bitfit": peft.create_bitfit}
+    for i, kind in enumerate(peft_kinds):
+        zoo.register_peft(f"app-{kind}", cfg, "base", kind,
+                          makers[kind](cfg, jax.random.PRNGKey(seed + 2 + i)))
+    return cfg, params, zoo

@@ -1,12 +1,21 @@
-"""Real-execution serving engine at laptop scale (DESIGN.md §2).
+"""Real-execution serving engine: continuous batching over a shared paged
+KV pool (DESIGN.md §2).
 
-Drives chains of blocks with actual JAX compute and per-block KV caches —
-the numerics-bearing counterpart of the discrete-event evaluation.  Used by
-the serve example, the adaptive-serving quality experiment (paper Fig. 20)
-and the end-to-end tests.
+Requests from different apps are admitted into a step-driven scheduler;
+every ``step()`` decodes one token for all in-flight requests, merging
+requests that sit on the same block into one batched kernel call
+(cross-app batching on shared foundation blocks, per-block batch caps per
+paper §5.2).  KV state lives in slot-based page pools shared across chains
+and is consumed through the paged-attention kernel
+(``repro.kernels.paged_attention``; Pallas on TPU, jnp oracle elsewhere).
+
+The numerics-bearing counterpart of the discrete-event Simulation — both
+implement the unified ``Server`` API (submit / step / drain).
 """
 from __future__ import annotations
 
+import functools
+import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -15,12 +24,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.blocks import (
+    Block,
     BlockChain,
     apply_block,
-    block_decode,
-    block_prefill,
+    block_decode_paged,
+    block_prefill_raw,
 )
 from repro.core.zoo import BlockZoo
+from repro.serving.api import ServeRequest, ServeResult, Server
+from repro.serving.kv_pool import KVPool
 
 
 @dataclass
@@ -30,12 +42,52 @@ class GenerationResult:
     adaptive_blocks_used: int = 0
 
 
-class BlockEngine:
-    """Chain executor with per-block KV state and continuous batching."""
+@dataclass
+class EngineConfig:
+    max_active: int = 32        # continuous-batch width (in-flight requests)
+    max_block_batch: int = 16   # per-block batch cap (paper §5.2)
+    page_size: int = 16         # KV pool page, in tokens
+    num_pages: int = 0          # 0 -> sized from max_active * max_len
+    attn_impl: str = "auto"     # auto | ref | pallas | interpret
 
-    def __init__(self, zoo: BlockZoo, max_len: int = 256):
+
+@dataclass
+class _ReqState:
+    rid: int
+    app: str
+    steps: List[Tuple[Block, Tuple[Block, ...]]]  # resolved (block, adapters)
+    gen_len: int
+    prompt_len: int
+    adaptive_blocks_used: int = 0
+    kv_len: int = 0             # tokens currently cached (prompt + decoded)
+    tokens: List[int] = field(default_factory=list)
+    next_token: Optional[int] = None
+    probs_last: Optional[np.ndarray] = None
+    t_submit: float = 0.0
+
+
+class BlockEngine(Server):
+    """Continuous-batching chain executor over shared paged KV pools."""
+
+    def __init__(self, zoo: BlockZoo, max_len: int = 256,
+                 config: Optional[EngineConfig] = None):
         self.zoo = zoo
         self.max_len = max_len
+        self.config = config or EngineConfig()
+        self._rid = itertools.count()
+        self.pending: List[Tuple[ServeRequest, BlockChain]] = []
+        self.active: List[_ReqState] = []
+        self.pools: Dict[Tuple[int, int], KVPool] = {}  # (KVH, hd) -> pool
+        self._block_fns: Dict[Tuple, object] = {}
+        self._prefill_fns: Dict[Tuple, object] = {}
+        # slots are preallocated at admission, so a group's block table is
+        # constant for its lifetime: cache per (rids, hop), reset whenever
+        # the active set changes
+        self._table_cache: Dict[Tuple, jnp.ndarray] = {}
+        self.stats = {"steps": 0, "prefills": 0, "decode_tokens": 0,
+                      "group_calls": 0}
+
+    # -- chain resolution ---------------------------------------------------
 
     def _steps(self, chain: BlockChain, override: Optional[Dict[str, str]]):
         out = []
@@ -50,40 +102,276 @@ class BlockEngine:
             out.append((block, adapters))
         return out, used_adaptive
 
+    # -- KV pool management -------------------------------------------------
+
+    def _pool_for(self, block: Block) -> KVPool:
+        cfg = block.cfg
+        kvh = cfg.num_kv_heads or cfg.num_heads
+        hd = cfg.resolved_head_dim
+        key = (kvh, hd)
+        if key not in self.pools:
+            from repro.models.layers import COMPUTE_DTYPE
+
+            c = self.config
+            pages_per_seq = -(-self.max_len // c.page_size)
+            num_pages = c.num_pages or (
+                1 + c.max_active * pages_per_seq * self._max_attn_steps())
+            self.pools[key] = KVPool(num_pages, c.page_size, kvh, hd,
+                                     dtype=COMPUTE_DTYPE)
+        return self.pools[key]
+
+    def _max_attn_steps(self) -> int:
+        """Upper bound on attention-bearing steps of any registered chain."""
+        n = 1
+        for chain in self.zoo.chains.values():
+            c = sum(1 for s in chain.steps
+                    if self.zoo.blocks[s.block_id].kind in ("layer",
+                                                            "attention"))
+            n = max(n, c)
+        return n
+
+    # -- jitted per-block executors ----------------------------------------
+
+    def _block_fn(self, block: Block, adapters: Tuple[Block, ...]):
+        key = (block.id, tuple(a.id for a in adapters))
+        fn = self._block_fns.get(key)
+        if fn is not None:
+            return fn
+        impl = self.config.attn_impl
+        if block.kind in ("layer", "attention"):
+            if block.cfg.sliding_window:
+                raise NotImplementedError(
+                    "paged decode does not support sliding-window blocks")
+
+            # donate the pool slabs: the update is a one-token scatter, so
+            # XLA can write in place instead of copying the whole pool
+            @functools.partial(jax.jit, donate_argnums=(1, 2))
+            def fn(x, k_pages, v_pages, tables, kv_len):
+                return block_decode_paged(block, x, k_pages, v_pages,
+                                          tables, kv_len, adapters=adapters,
+                                          attn_impl=impl)
+        else:
+
+            @jax.jit
+            def fn(x):
+                return apply_block(block, x, adapters=adapters)
+
+        self._block_fns[key] = fn
+        return fn
+
+    def _prefill_fn(self, block: Block, adapters: Tuple[Block, ...]):
+        """Jitted prefill per (block, adapters) — without this every prefill
+        re-lowers the attention scan from scratch (dominates admission)."""
+        key = (block.id, tuple(a.id for a in adapters))
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+
+            @jax.jit
+            def fn(x):
+                return block_prefill_raw(block, x, adapters=adapters)
+
+            self._prefill_fns[key] = fn
+        return fn
+
+    # -- Server API ---------------------------------------------------------
+
+    def submit(self, req: ServeRequest) -> int:
+        if req.prompt_tokens is None:
+            raise ValueError("BlockEngine requires prompt_tokens")
+        if req.app not in self.zoo.chains:
+            raise KeyError(f"unknown app {req.app!r}")
+        return self._submit_chain(req, self.zoo.chains[req.app])
+
+    def _submit_chain(self, req: ServeRequest, chain: BlockChain) -> int:
+        if req.rid is None:
+            req.rid = next(self._rid)
+        if req.prompt_len + req.gen_len > self.max_len:
+            raise ValueError(
+                f"request length {req.prompt_len}+{req.gen_len} exceeds "
+                f"engine max_len={self.max_len}")
+        self.pending.append((req, chain))
+        return req.rid
+
+    def step(self) -> Optional[List[ServeResult]]:
+        self._admit()
+        if not self.active:
+            return None if not self.pending else []
+        self.stats["steps"] += 1
+        return self._decode_step()
+
+    def drain(self) -> List[ServeResult]:
+        out: List[ServeResult] = []
+        while True:
+            res = self.step()
+            if res is None:
+                return out
+            out.extend(res)
+
+    # -- admission: prefill into the shared pool ----------------------------
+
+    def _admit(self):
+        while self.pending and len(self.active) < self.config.max_active:
+            req, chain = self.pending[0]
+            steps, used_adaptive = self._steps(chain, req.block_override)
+            total = req.prompt_len + req.gen_len
+            attn_steps = [i for i, (b, _) in enumerate(steps)
+                          if b.kind in ("layer", "attention")]
+            # admission control: all slots for the request's lifetime must
+            # fit now, or the request waits (no mid-flight OOM)
+            by_pool: Dict[Tuple[int, int], int] = {}
+            for i in attn_steps:
+                pool = self._pool_for(steps[i][0])
+                key = next(k for k, p in self.pools.items() if p is pool)
+                by_pool[key] = by_pool.get(key, 0) + 1
+            if any(not self.pools[k].can_fit(total, n)
+                   for k, n in by_pool.items()):
+                if not self.active:  # nothing will free pages: hard error
+                    raise MemoryError(
+                        f"request rid={req.rid} can never fit in the KV pool")
+                return
+            self.pending.pop(0)
+            state = _ReqState(rid=req.rid, app=req.app, steps=steps,
+                              gen_len=req.gen_len, prompt_len=req.prompt_len,
+                              adaptive_blocks_used=used_adaptive,
+                              t_submit=req.arrival)
+            self._prefill(state, req.prompt_tokens)
+            self.active.append(state)
+
+    def _prefill(self, state: _ReqState, prompt_tokens: np.ndarray):
+        x = jnp.asarray(prompt_tokens, jnp.int32)[None]  # (1, S)
+        for i, (block, adapters) in enumerate(state.steps):
+            x, k_r, v = self._prefill_fn(block, adapters)(x)
+            if k_r is not None:
+                pool = self._pool_for(block)
+                pool.alloc(state.rid, i, state.prompt_len + state.gen_len)
+                pool.write_prefill(state.rid, i, k_r, v)
+        state.kv_len = state.prompt_len
+        logits = x[0, -1]
+        state.next_token = int(jnp.argmax(logits))
+        state.probs_last = np.asarray(
+            jax.nn.softmax(logits.astype(jnp.float32)))
+        self.stats["prefills"] += 1
+
+    # -- one decode iteration over all in-flight requests -------------------
+
+    def _decode_step(self) -> List[ServeResult]:
+        cap = self.config.max_block_batch
+        # emit the token chosen at the previous hop (prefill or last decode)
+        for s in self.active:
+            s.tokens.append(s.next_token)
+        still_going = [s for s in self.active
+                       if len(s.tokens) < s.gen_len]
+        finished = [s for s in self.active if s not in still_going]
+        results = [self._finish(s) for s in finished]
+        if finished:
+            self._table_cache.clear()
+        self.active = still_going
+        if not still_going:
+            return results
+        # run every remaining request one full token through its chain,
+        # hop-by-hop; at each hop requests sitting on the same (block,
+        # adapters) merge into one batched call, capped at max_block_batch
+        xs: Dict[int, jnp.ndarray] = {
+            s.rid: jnp.asarray([[s.next_token]], jnp.int32)
+            for s in still_going}
+        cursors = {s.rid: 0 for s in still_going}
+        by_rid = {s.rid: s for s in still_going}
+        while True:
+            frontier: Dict[Tuple, List[int]] = {}
+            for s in still_going:
+                c = cursors[s.rid]
+                if c >= len(s.steps):
+                    continue
+                block, adapters = s.steps[c]
+                key = (block.id, tuple(a.id for a in adapters), c)
+                frontier.setdefault(key[:2], []).append(s.rid)
+            if not frontier:
+                break
+            for (bid, aids), rids in frontier.items():
+                for chunk_start in range(0, len(rids), cap):
+                    chunk = rids[chunk_start:chunk_start + cap]
+                    self._run_group(chunk, by_rid, cursors, xs)
+            for rid in list(cursors):
+                cursors[rid] += 1
+        # chain finished: lm_head output -> next token (+ final-step probs
+        # for requests emitting their last token next step).  One batched
+        # argmax/softmax per step keeps host round-trips off the hot path.
+        by_vocab: Dict[int, List[_ReqState]] = {}
+        for s in still_going:
+            by_vocab.setdefault(xs[s.rid].shape[-1], []).append(s)
+        for group in by_vocab.values():
+            logits = jnp.concatenate([xs[s.rid] for s in group], axis=0)[:, 0]
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            last = [i for i, s in enumerate(group)
+                    if len(s.tokens) + 1 >= s.gen_len]
+            if last:
+                probs = np.asarray(jax.nn.softmax(
+                    logits[jnp.asarray(last)].astype(jnp.float32), axis=-1))
+                for j, i in enumerate(last):
+                    group[i].probs_last = probs[j]
+            for i, s in enumerate(group):
+                s.next_token = int(nxt[i])
+                s.kv_len += 1
+                self.stats["decode_tokens"] += 1
+        return results
+
+    def _run_group(self, rids: List[int], by_rid, cursors, xs):
+        """Batched execution of one (block, adapters) group at one hop."""
+        s0 = by_rid[rids[0]]
+        cursor = cursors[s0.rid]
+        block, adapters = s0.steps[cursor]
+        fn = self._block_fn(block, adapters)
+        x = jnp.concatenate([xs[r] for r in rids], axis=0)
+        self.stats["group_calls"] += 1
+        if block.kind in ("layer", "attention"):
+            pool = self._pool_for(block)
+            tkey = (tuple(rids), cursor)
+            tables = self._table_cache.get(tkey)
+            if tables is None:
+                tables = jnp.asarray(pool.block_table(
+                    [(r, cursors[r]) for r in rids]))
+                self._table_cache[tkey] = tables
+            kv_len = jnp.asarray([by_rid[r].kv_len for r in rids], jnp.int32)
+            out, pool.k_pages, pool.v_pages = fn(
+                x, pool.k_pages, pool.v_pages, tables, kv_len)
+        else:
+            out = fn(x)
+        for i, r in enumerate(rids):
+            xs[r] = out[i:i + 1]
+
+    def _finish(self, s: _ReqState) -> ServeResult:
+        for pool in self.pools.values():
+            for key in [k for k in pool.slots if k[0] == s.rid]:
+                pool.free(*key)
+        return ServeResult(
+            rid=s.rid, app=s.app,
+            tokens=np.asarray(s.tokens, np.int32),
+            probs_last=s.probs_last,
+            info={"adaptive_blocks_used": s.adaptive_blocks_used,
+                  "prompt_len": s.prompt_len})
+
+    # -- legacy batch API (sequential semantics preserved) -------------------
+
     def generate(self, chain: BlockChain, prompt_tokens, gen_len: int,
                  *, block_override: Optional[Dict[str, str]] = None,
                  greedy: bool = True, rng=None) -> GenerationResult:
-        """prompt_tokens: (B, S) int32.  Runs prefill through the chain, then
-        ``gen_len`` decode steps with per-block KV caches."""
-        steps, used_adaptive = self._steps(chain, block_override)
-        B, S = prompt_tokens.shape
-        kv_len = jnp.full((B,), S, jnp.int32)
-        caches: List = []
-        x = prompt_tokens
-        for block, adapters in steps:
-            x, cache = block_prefill(block, x, adapters=adapters,
-                                     max_len=S + gen_len)
-            caches.append(cache)
-        logits = x[:, -1]  # lm_head output at last prompt position
-        out_tokens = []
-        probs = None
-        for t in range(gen_len):
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            out_tokens.append(nxt)
-            x = nxt[:, None]
-            new_caches = []
-            for (block, adapters), cache in zip(steps, caches):
-                x, cache = block_decode(block, x, cache, kv_len,
-                                        adapters=adapters)
-                new_caches.append(cache)
-            caches = new_caches
-            kv_len = kv_len + 1
-            logits = x[:, 0]
-            probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-        return GenerationResult(
-            tokens=np.stack([np.asarray(t) for t in out_tokens], axis=1),
-            probs_last=np.asarray(probs),
-            adaptive_blocks_used=used_adaptive)
+        """prompt_tokens: (B, S) int32.  Runs the rows through the
+        continuous-batching core as one submitted batch; greedy decode."""
+        del greedy, rng  # greedy only, kept for signature compatibility
+        prompt_tokens = np.asarray(prompt_tokens)
+        B = prompt_tokens.shape[0]
+        rids = []
+        for b in range(B):
+            req = ServeRequest(app=chain.model, gen_len=gen_len,
+                               prompt_tokens=prompt_tokens[b],
+                               block_override=block_override)
+            rids.append(self._submit_chain(req, chain))
+        results = {r.rid: r for r in self.drain() if r.rid in set(rids)}
+        tokens = np.stack([results[r].tokens for r in rids], axis=0)
+        probs = np.stack([results[r].probs_last for r in rids], axis=0)
+        used = results[rids[0]].info["adaptive_blocks_used"]
+        return GenerationResult(tokens=tokens, probs_last=probs,
+                                adaptive_blocks_used=used)
 
 
 def adaptive_serving_similarity(zoo: BlockZoo, engine: BlockEngine,

@@ -1,0 +1,117 @@
+"""Slot-based paged KV pool shared across chains (DESIGN.md §2).
+
+One pool per (kv_heads, head_dim, dtype) signature holds two page slabs
+``(num_pages, page_size, KVH, hd)`` for K and V.  Every attention-bearing
+chain step of every in-flight request owns a run of page ids (a *slot*)
+carved out of the same slab, so requests from different apps — and the
+shared foundation blocks they batch on — draw from one memory budget, the
+way vLLM-style paged attention manages a single device cache.
+
+Page 0 is reserved as a scratch ("trash") page: group batching pads ragged
+block tables with it, and masked lanes of padded rows read/write there
+harmlessly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+TRASH_PAGE = 0  # reserved scratch page for padded table entries
+
+
+@dataclass
+class KVSlot:
+    """A sequence's page run inside one pool for one attention block."""
+    pages: List[int]
+    max_len: int  # capacity in tokens = len(pages) * page_size
+
+
+class KVPool:
+    """Paged K/V slab with a free list and per-slot bookkeeping."""
+
+    def __init__(self, num_pages: int, page_size: int, kv_heads: int,
+                 head_dim: int, dtype=jnp.bfloat16):
+        assert num_pages >= 2, "pool needs at least the trash page + one slot"
+        self.page_size = page_size
+        self.num_pages = num_pages
+        shape = (num_pages, page_size, kv_heads, head_dim)
+        self.k_pages = jnp.zeros(shape, dtype)
+        self.v_pages = jnp.zeros(shape, dtype)
+        # page 0 reserved (TRASH_PAGE); never handed out
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self.slots: Dict[Tuple[int, int], KVSlot] = {}  # (rid, step) -> slot
+        self.alloc_count = 0
+        self.free_count = 0
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def pages_needed(self, tokens: int) -> int:
+        return max(1, -(-tokens // self.page_size))
+
+    def can_fit(self, tokens: int, n_slots: int) -> bool:
+        return self.pages_needed(tokens) * n_slots <= len(self._free)
+
+    # -- slot lifecycle -----------------------------------------------------
+
+    def alloc(self, rid: int, step: int, tokens: int) -> KVSlot:
+        """Reserve enough pages for ``tokens`` total tokens (prompt + full
+        generation budget — allocation happens once, at admission)."""
+        n = self.pages_needed(tokens)
+        if n > len(self._free):
+            raise MemoryError(
+                f"KV pool exhausted: need {n} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(n)]
+        slot = KVSlot(pages=pages, max_len=n * self.page_size)
+        self.slots[(rid, step)] = slot
+        self.alloc_count += n
+        return slot
+
+    def free(self, rid: int, step: int):
+        slot = self.slots.pop((rid, step))
+        self._free.extend(slot.pages)
+        self.free_count += len(slot.pages)
+
+    def free_request(self, rid: int):
+        for key in [k for k in self.slots if k[0] == rid]:
+            self.free(*key)
+
+    # -- batched table construction ----------------------------------------
+
+    def block_table(self, keys: List[Tuple[int, int]]) -> np.ndarray:
+        """Stack the slots' page runs into a (B, n) int32 table, padding
+        ragged rows with the trash page (reads beyond kv_len are masked)."""
+        rows = [self.slots[k].pages for k in keys]
+        width = max(len(r) for r in rows)
+        table = np.full((len(rows), width), TRASH_PAGE, np.int32)
+        for i, r in enumerate(rows):
+            table[i, :len(r)] = r
+        return table
+
+    # -- prefill scatter ----------------------------------------------------
+
+    def write_prefill(self, rid: int, step: int, k_r, v):
+        """Scatter a prefill's raw K/V (1, S, KVH, hd) into the slot's pages."""
+        slot = self.slots[(rid, step)]
+        S = k_r.shape[1]
+        npages = self.pages_needed(S)
+        cap = npages * self.page_size
+        pad = cap - S
+        if pad:
+            k_r = jnp.pad(k_r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kp = k_r[0].reshape(npages, self.page_size, *k_r.shape[2:])
+        vp = v[0].reshape(npages, self.page_size, *v.shape[2:])
+        idx = jnp.asarray(slot.pages[:npages], jnp.int32)
+        self.k_pages = self.k_pages.at[idx].set(kp.astype(self.k_pages.dtype))
+        self.v_pages = self.v_pages.at[idx].set(vp.astype(self.v_pages.dtype))

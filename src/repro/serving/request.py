@@ -2,9 +2,12 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, TYPE_CHECKING
 
 import numpy as np
+
+if TYPE_CHECKING:
+    from repro.serving.api import ServeRequest
 
 
 @dataclass
@@ -59,3 +62,22 @@ def generate_trace(apps: List[str], *, total_requests: int = 400,
             rid += 1
     reqs.sort(key=lambda r: r.arrival)
     return reqs
+
+
+def as_serve_requests(trace: List[Request], *, vocab_size: int = 0,
+                      seed: int = 0) -> List["ServeRequest"]:
+    """Lift trace Requests into the unified Server API.  When ``vocab_size``
+    is given, synthesize concrete prompt tokens (real-execution engines need
+    them); the simulator only reads the lengths."""
+    from repro.serving.api import ServeRequest
+
+    rng = np.random.RandomState(seed)
+    out = []
+    for r in trace:
+        tokens = (rng.randint(0, vocab_size, size=r.prompt_len)
+                  .astype(np.int32) if vocab_size else None)
+        out.append(ServeRequest(app=r.app, gen_len=r.gen_len,
+                                prompt_tokens=tokens,
+                                prompt_len=r.prompt_len,
+                                arrival=r.arrival, rid=r.rid))
+    return out

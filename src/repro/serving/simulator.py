@@ -11,6 +11,7 @@ Ablations (paper §7.3) via SchedulerConfig flags.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import itertools
 from collections import defaultdict, deque
@@ -19,6 +20,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.api import ServeRequest, ServeResult, Server
 from repro.serving.cluster import Cluster, HBM_BW, paper_cluster
 from repro.serving.cost_model import (
     BlockCost,
@@ -149,6 +151,36 @@ class SchedulerConfig:
     branching_overhead: float = 0.06      # PS: per-merged-variant compute tax
     seed: int = 0
 
+    # single source of truth for CLI plumbing: every field becomes a flag
+    _ARG_CHOICES = {"mode": ("blockllm", "pm", "ps"),
+                    "kv_policy": ("owner", "recalc", "least-busy"),
+                    "placement": ("locality", "fragmentation")}
+
+    @classmethod
+    def add_args(cls, parser):
+        """Mirror every config field as an argparse flag: booleans that
+        default True become ``--no-<name>``, the rest ``--<name>``."""
+        for f in dataclasses.fields(cls):
+            flag = f.name.replace("_", "-")
+            if isinstance(f.default, bool):
+                if f.default:
+                    parser.add_argument(f"--no-{flag}", dest=f.name,
+                                        action="store_false", default=True)
+                else:
+                    parser.add_argument(f"--{flag}", dest=f.name,
+                                        action="store_true", default=False)
+            else:
+                parser.add_argument(
+                    f"--{flag}", dest=f.name, type=type(f.default),
+                    default=f.default,
+                    choices=cls._ARG_CHOICES.get(f.name))
+        return parser
+
+    @classmethod
+    def from_args(cls, args) -> "SchedulerConfig":
+        return cls(**{f.name: getattr(args, f.name)
+                      for f in dataclasses.fields(cls)})
+
 
 @dataclass
 class Instance:
@@ -163,7 +195,11 @@ class Instance:
     loading_until: float = 0.0  # block swap-in completes at this time
 
 
-class Simulation:
+class Simulation(Server):
+    """Discrete-event backend of the unified ``Server`` API: ``submit``
+    pushes an arrival event, ``step`` processes one event, ``drain`` runs
+    the event loop dry.  ``run(trace)`` remains as the batch convenience."""
+
     def __init__(self, cfg: ServingConfig, sched: SchedulerConfig,
                  cluster: Optional[Cluster] = None):
         self.cfg = cfg
@@ -189,6 +225,11 @@ class Simulation:
         self.stats = defaultdict(float)
         self.spec_attempts = 0
         self.spec_hits = 0
+        # Server-API state
+        self._rid = itertools.count()
+        self._placed = False
+        self._next_rescale = 1.0
+        self._until = 1e9
 
     # -- placement ---------------------------------------------------------
 
@@ -489,36 +530,67 @@ class Simulation:
         for inst in self.instances.values():
             inst.speculated = inst.iid in chosen
 
-    # -- main loop -----------------------------------------------------------
+    # -- main loop (unified Server API) --------------------------------------
+
+    def submit(self, req) -> int:
+        """Accept a ServeRequest (or a raw trace Request) as an arrival."""
+        if isinstance(req, ServeRequest):
+            rid = req.rid if req.rid is not None else next(self._rid)
+            req = Request(rid=rid, app=req.app, arrival=req.arrival,
+                          prompt_len=req.prompt_len or 1,
+                          gen_len=req.gen_len)
+        heapq.heappush(self.events, (req.arrival, next(self._seq),
+                                     "arrival", req))
+        return req.rid
+
+    def step(self) -> Optional[List[ServeResult]]:
+        """Process one discrete event; returns requests completed by it."""
+        if not self._placed:
+            self.initial_placement()
+            self._placed = True
+        if not self.events:
+            return None
+        done_before = len(self.done)
+        t, _, kind, payload = heapq.heappop(self.events)
+        self.now = max(self.now, t)
+        if self.now > self._until:
+            return None
+        while self.now >= self._next_rescale:
+            self._rescale()
+            self._next_rescale += self.sched.rescale_period
+        if kind == "arrival":
+            req: Request = payload
+            self.dispatch(req, self.cfg.chains[req.app].blocks[0], None)
+        elif kind == "enqueue":
+            iid, req = payload
+            self._service(self.instances[iid])
+        elif kind == "service_done":
+            iid, batch, handoff = payload
+            inst = self.instances[iid]
+            inst.busy = False
+            for r in batch:
+                inst.countdowns.pop(r.rid, None)
+                self._advance(r, inst, handoff)
+            self._service(inst)
+        return [ServeResult(rid=r.rid, app=r.app, latency=r.latency(),
+                            info={"queue_time": r.queue_time,
+                                  "transfer_time": r.transfer_time,
+                                  "adaptive_hops": r.adaptive_hops})
+                for r in self.done[done_before:]]
+
+    def drain(self) -> List[ServeResult]:
+        out: List[ServeResult] = []
+        while True:
+            res = self.step()
+            if res is None:
+                return out
+            out.extend(res)
 
     def run(self, requests: List[Request], until: float = 1e9) -> dict:
-        self.initial_placement()
         for r in requests:
-            heapq.heappush(self.events, (r.arrival, next(self._seq),
-                                         "arrival", r))
-        next_rescale = 1.0
-        while self.events:
-            t, _, kind, payload = heapq.heappop(self.events)
-            self.now = max(self.now, t)
-            if self.now > until:
-                break
-            while self.now >= next_rescale:
-                self._rescale()
-                next_rescale += self.sched.rescale_period
-            if kind == "arrival":
-                req: Request = payload
-                self.dispatch(req, self.cfg.chains[req.app].blocks[0], None)
-            elif kind == "enqueue":
-                iid, req = payload
-                self._service(self.instances[iid])
-            elif kind == "service_done":
-                iid, batch, handoff = payload
-                inst = self.instances[iid]
-                inst.busy = False
-                for r in batch:
-                    inst.countdowns.pop(r.rid, None)
-                    self._advance(r, inst, handoff)
-                self._service(inst)
+            self.submit(r)
+        self._until = until
+        self.drain()
         return self.metrics()
 
     # -- metrics (§7.1) -------------------------------------------------------

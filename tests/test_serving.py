@@ -136,6 +136,7 @@ def test_engine_generation(demo_zoo):
     assert np.all(np.isfinite(res.probs_last))
 
 
+@pytest.mark.slow
 def test_engine_chain_consistency(demo_zoo):
     """Engine prefill+decode == monolithic model generation (greedy)."""
     from repro.models.model import build_model
