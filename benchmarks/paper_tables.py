@@ -4,10 +4,9 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import WORKLOAD, demo_zoo, run_sim
+from benchmarks.common import demo_zoo, run_sim
 
 
 # -- Table 1: PEFT shared-parameter fractions --------------------------------
@@ -270,7 +269,6 @@ def table4_surrogates():
         surrogate_fidelity,
         surrogate_speedup,
     )
-    from repro.core.zoo import BlockZoo
 
     cfg, params, zoo = demo_zoo()
     layer = zoo.blocks[zoo.chains["base"].steps[2].block_id]

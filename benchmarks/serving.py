@@ -39,6 +39,17 @@ def make_requests(cfg, zoo, args, seed=0):
         .astype(np.int32)) for i in range(args.requests)]
 
 
+def latency_percentiles(results) -> dict:
+    """p50/p95 per-request decode latency (submit→finish wall clock) from
+    the timestamps the engine threads through ``ServeResult.info``."""
+    lats = [r.info["latency_s"] for r in results
+            if r.info and "latency_s" in r.info]
+    if not lats:
+        return {"latency_p50_s": 0.0, "latency_p95_s": 0.0}
+    return {"latency_p50_s": round(float(np.percentile(lats, 50)), 4),
+            "latency_p95_s": round(float(np.percentile(lats, 95)), 4)}
+
+
 def bench_batched(cfg, zoo, engine, args, seed):
     reqs = make_requests(cfg, zoo, args, seed)
     t0 = time.perf_counter()
@@ -74,6 +85,8 @@ def run(requests: int = 8, gen_len: int = 32, prompt_len: int = 16):
         ("serving/sequential_tokens_per_s",
          report["sequential_tokens_per_s"], f"N={requests}"),
         ("serving/speedup", report["speedup"], "target>=1.5"),
+        ("serving/latency_p50_s", report["latency_p50_s"], "batched"),
+        ("serving/latency_p95_s", report["latency_p95_s"], "batched"),
     ]
 
 
@@ -85,11 +98,12 @@ def _measure(args) -> dict:
     warm = argparse.Namespace(**{**vars(args), "requests": 1})
     bench_sequential(cfg, zoo, seq_engine, warm, seed=123)
 
-    b_toks, b_dt, _ = bench_batched(cfg, zoo, engine, args, seed=0)
+    b_toks, b_dt, b_results = bench_batched(cfg, zoo, engine, args, seed=0)
     s_toks, s_dt, _ = bench_sequential(cfg, zoo, seq_engine, args, seed=0)
     b_tps = b_toks / max(b_dt, 1e-9)
     s_tps = s_toks / max(s_dt, 1e-9)
     return {
+        **latency_percentiles(b_results),
         "concurrency": args.requests,
         "gen_len": args.gen_len,
         "prompt_len": args.prompt_len,

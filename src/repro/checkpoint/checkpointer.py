@@ -13,9 +13,7 @@
 from __future__ import annotations
 
 import json
-import os
 import signal
-import threading
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 from typing import Any, Optional

@@ -7,8 +7,8 @@ variant of the same family.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 # ---------------------------------------------------------------------------
 # Input shapes (assigned; identical set for every LM-family arch).

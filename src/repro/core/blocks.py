@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
-from repro.models.transformer import _mlp_layer, _qkv
+from repro.models.transformer import _mlp_layer
 
 
 def tree_bytes(tree) -> int:
@@ -33,6 +33,9 @@ def tree_hash(tree) -> str:
         h.update(str(path).encode())
         h.update(np.ascontiguousarray(jax.device_get(leaf)).tobytes())
     return h.hexdigest()[:16]
+
+
+ATTENTION_KINDS = ("layer", "attention")  # block kinds that own KV state
 
 
 @dataclass
@@ -50,6 +53,18 @@ class Block:
     @property
     def n_params(self) -> int:
         return sum(x.size for x in jax.tree.leaves(self.params))
+
+    @property
+    def has_kv(self) -> bool:
+        """True for blocks that carry attention KV state when serving."""
+        return self.kind in ATTENTION_KINDS
+
+    @property
+    def kv_signature(self) -> Tuple[int, int]:
+        """(kv_heads, head_dim) — the KV-pool signature this block's slots
+        live under (one shared pool per signature, DESIGN.md §2)."""
+        cfg = self.cfg
+        return (cfg.num_kv_heads or cfg.num_heads, cfg.resolved_head_dim)
 
     @property
     def bytes(self) -> int:

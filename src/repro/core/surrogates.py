@@ -8,7 +8,6 @@ estimate = FLOP ratio.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

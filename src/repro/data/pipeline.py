@@ -7,7 +7,7 @@ checkpoint replays the same batch sequence.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

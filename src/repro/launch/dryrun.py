@@ -41,7 +41,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
              overrides: dict | None = None) -> dict:
     import jax
 
-    from repro.configs import SHAPES, applicable_shapes, get_config
+    from repro.configs import SHAPES, get_config
     from repro.launch.hlo_analysis import analyze_hlo_text
     from repro.launch.mesh import make_production_mesh
     from repro.launch.steps import build_cell
@@ -117,7 +117,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 
 
 def cell_list(mesh_arg: str):
-    from repro.configs import SHAPES, applicable_shapes, get_config
+    from repro.configs import SHAPES, get_config
 
     meshes = ["single", "multi"] if mesh_arg == "both" else [mesh_arg]
     cells = []

@@ -16,7 +16,6 @@ backend_config.  All numbers are per-device (the HLO is one SPMD program).
 """
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 from dataclasses import dataclass, field

@@ -50,7 +50,8 @@ def run_real(args) -> dict:
 
     cfg, _, zoo = build_demo_zoo(seed=0)
     engine = BlockEngine(zoo, max_len=args.max_len,
-                         config=EngineConfig(max_active=args.max_batch))
+                         config=EngineConfig(max_active=args.max_batch,
+                                             policy=args.policy))
     apps = list(zoo.chains)
     rng = np.random.RandomState(0)
     t0 = time.perf_counter()
@@ -63,11 +64,18 @@ def run_real(args) -> dict:
     results = engine.drain()
     dt = time.perf_counter() - t0
     gen_tokens = sum(len(r.tokens) for r in results)
+    lats = sorted(r.info["latency_s"] for r in results
+                  if r.info and "latency_s" in r.info)
+    pct = (lambda q: round(lats[min(len(lats) - 1,
+                                    int(q * (len(lats) - 1) + 0.5))], 4)
+           ) if lats else (lambda q: 0.0)
     return {
         "completed": len(results),
         "generated_tokens": gen_tokens,
         "wall_s": round(dt, 3),
         "tokens_per_s": round(gen_tokens / max(dt, 1e-9), 2),
+        "latency_p50_s": pct(0.50),
+        "latency_p95_s": pct(0.95),
         "engine_stats": dict(engine.stats),
         "sample": results[0].tokens[:8].tolist() if results else [],
     }

@@ -5,11 +5,10 @@ repro.models); stacked leading dims get ``None`` prepended automatically.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.tree_util import DictKey, GetAttrKey, SequenceKey
+from jax.tree_util import DictKey, GetAttrKey
 
 from repro.configs.base import ModelConfig, ShapeConfig
 

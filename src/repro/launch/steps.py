@@ -3,7 +3,6 @@ cell.  Used by the dry-run (lower/compile against ShapeDtypeStructs) and by
 the real launchers (train.py / serve.py) at small scale."""
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -11,7 +10,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch import shardings as SH
-from repro.models.model import Model, build_model
+from repro.models.model import build_model
 from repro.models.sharding import ShardingCtx
 from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
 

@@ -9,7 +9,6 @@ reuse).
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.sharding import constrain
 
 
 def moe_dispatch_mlp(h, combine, p, cfg: ModelConfig, shd):

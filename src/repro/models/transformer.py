@@ -6,7 +6,6 @@ Scan-over-layers with stacked (L, ...) params so the HLO stays small for the
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

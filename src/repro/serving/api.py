@@ -30,6 +30,7 @@ class ServeRequest:
     prompt_tokens: Optional[np.ndarray] = None  # (S,) int32
     prompt_len: int = 0
     arrival: float = 0.0
+    priority: int = 0  # higher preferred under the "priority" policy
     block_override: Optional[Dict[str, str]] = None  # adaptive serving
     rid: Optional[int] = None  # assigned by submit() when None
 

@@ -10,7 +10,7 @@ evaluation (repro.serving.simulator).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
 # hardware constants (DESIGN.md §2; per-chip)
 PEAK_FLOPS = 197e12        # bf16

@@ -7,7 +7,7 @@ static properties; zoo profiles can override the analytic compute model.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.serving.cluster import (
     HBM_BW,
@@ -86,6 +86,17 @@ def best_kv_strategy(cluster: Cluster, d_i: int, owner: Optional[int],
         return t_rec, "recalc"
     t_mv = t_move_with_kv(cluster, d_i, owner, d_k, new_token_bytes, kv_bytes)
     return (t_mv, "transfer") if t_mv < t_rec else (t_rec, "recalc")
+
+
+def preempt_readmit_strategy(kv_bytes: int, prefix_flops: float,
+                             mfu_cap: float = 0.6) -> Tuple[str, float]:
+    """§5.1 transfer-vs-recalc applied to single-host preemption: spilling
+    a preempted request's pages costs a host-link round trip (out at
+    eviction, back at readmission); recalculation replays the prefix
+    matmuls at readmission.  Returns (strategy, estimated seconds)."""
+    t_spill = 2.0 * kv_bytes / HOST_TO_DEVICE_BW
+    t_rec = prefix_flops / (PEAK_FLOPS * mfu_cap)
+    return ("spill", t_spill) if t_spill <= t_rec else ("recalc", t_rec)
 
 
 # --- §5.3: candidate-instance latency estimate -----------------------------

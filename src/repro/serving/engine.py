@@ -1,38 +1,41 @@
-"""Real-execution serving engine: continuous batching over a shared paged
-KV pool (DESIGN.md §2).
+"""Real-execution serving engine: glue over the three-layer serving core
+(DESIGN.md §2).
 
-Requests from different apps are admitted into a step-driven scheduler;
-every ``step()`` decodes one token for all in-flight requests, merging
-requests that sit on the same block into one batched kernel call
-(cross-app batching on shared foundation blocks, per-block batch caps per
-paper §5.2).  KV state lives in slot-based page pools shared across chains
-and is consumed through the paged-attention kernel
-(``repro.kernels.paged_attention``; Pallas on TPU, jnp oracle elsewhere).
+``BlockEngine`` implements the unified ``Server`` API (submit / step /
+drain) by wiring together the layers shared with the discrete-event
+``Simulation``:
 
-The numerics-bearing counterpart of the discrete-event Simulation — both
-implement the unified ``Server`` API (submit / step / drain).
+- the **scheduler** (``repro.serving.scheduler.Scheduler`` — the same
+  class the simulator drives) owns the waiting queue, priority/FCFS
+  admission order, per-(block, adapters) run queues and preemption
+  decisions;
+- the **executor** (``repro.serving.executor.BlockExecutor``) owns the
+  jitted per-block functions, cross-app group batching on shared blocks
+  (paper §5.2) and sampling;
+- the **KV manager** (``repro.serving.kv_pool.KVManager``) owns the
+  shared paged pools, admission planning, and slot preemption with the
+  §5.1 transfer-vs-recalc cost model deciding spill-to-host versus
+  recompute-on-readmit.
+
+The engine itself only resolves chains, runs the admission/decode loop,
+and translates between ``ServeRequest``/``ServeResult`` and the layers.
 """
 from __future__ import annotations
 
-import functools
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blocks import (
-    Block,
-    BlockChain,
-    apply_block,
-    block_decode_paged,
-    block_prefill_raw,
-)
+from repro.core.blocks import Block, BlockChain
 from repro.core.zoo import BlockZoo
 from repro.serving.api import ServeRequest, ServeResult, Server
-from repro.serving.kv_pool import KVPool
+from repro.serving.cost_model import preempt_readmit_strategy
+from repro.serving.executor import BlockExecutor
+from repro.serving.kv_pool import KVManager
+from repro.serving.scheduler import SchedEntry, Scheduler
 
 
 @dataclass
@@ -49,6 +52,9 @@ class EngineConfig:
     page_size: int = 16         # KV pool page, in tokens
     num_pages: int = 0          # 0 -> sized from max_active * max_len
     attn_impl: str = "auto"     # auto | ref | pallas | interpret
+    policy: str = "fcfs"        # admission order: fcfs | priority
+    preemption: bool = True     # pressure-driven slot eviction (priority)
+    preempt_strategy: str = "auto"  # auto | spill | recalc (§5.1)
 
 
 @dataclass
@@ -58,12 +64,14 @@ class _ReqState:
     steps: List[Tuple[Block, Tuple[Block, ...]]]  # resolved (block, adapters)
     gen_len: int
     prompt_len: int
+    prompt_tokens: Optional[np.ndarray] = None  # kept for recompute-on-readmit
     adaptive_blocks_used: int = 0
     kv_len: int = 0             # tokens currently cached (prompt + decoded)
     tokens: List[int] = field(default_factory=list)
     next_token: Optional[int] = None
     probs_last: Optional[np.ndarray] = None
-    t_submit: float = 0.0
+    t_submit: float = 0.0       # wall-clock submission time
+    preemptions: int = 0
 
 
 class BlockEngine(Server):
@@ -71,21 +79,29 @@ class BlockEngine(Server):
 
     def __init__(self, zoo: BlockZoo, max_len: int = 256,
                  config: Optional[EngineConfig] = None):
+        from repro.models.layers import COMPUTE_DTYPE
+
         self.zoo = zoo
         self.max_len = max_len
-        self.config = config or EngineConfig()
+        self.config = c = config or EngineConfig()
         self._rid = itertools.count()
-        self.pending: List[Tuple[ServeRequest, BlockChain]] = []
-        self.active: List[_ReqState] = []
-        self.pools: Dict[Tuple[int, int], KVPool] = {}  # (KVH, hd) -> pool
-        self._block_fns: Dict[Tuple, object] = {}
-        self._prefill_fns: Dict[Tuple, object] = {}
-        # slots are preallocated at admission, so a group's block table is
-        # constant for its lifetime: cache per (rids, hop), reset whenever
-        # the active set changes
-        self._table_cache: Dict[Tuple, jnp.ndarray] = {}
         self.stats = {"steps": 0, "prefills": 0, "decode_tokens": 0,
-                      "group_calls": 0}
+                      "group_calls": 0, "preemptions": 0, "spills": 0,
+                      "recalc_readmits": 0}
+        self.scheduler = Scheduler(policy=c.policy)
+        self.executor = BlockExecutor(attn_impl=c.attn_impl, stats=self.stats)
+        pages_per_seq = -(-max_len // c.page_size)
+        num_pages = c.num_pages or (
+            1 + c.max_active * pages_per_seq * self._max_attn_steps())
+        self.kv = KVManager(c.page_size, num_pages, dtype=COMPUTE_DTYPE)
+        self.active: List[_ReqState] = []
+        self._entries: Dict[int, SchedEntry] = {}  # rid -> running lifecycle
+        self._early: List[ServeResult] = []        # gen_len=0 completions
+
+    @property
+    def pools(self):
+        """Signature -> KVPool view (owned by the KV manager)."""
+        return self.kv.pools
 
     # -- chain resolution ---------------------------------------------------
 
@@ -102,76 +118,14 @@ class BlockEngine(Server):
             out.append((block, adapters))
         return out, used_adaptive
 
-    # -- KV pool management -------------------------------------------------
-
-    def _pool_for(self, block: Block) -> KVPool:
-        cfg = block.cfg
-        kvh = cfg.num_kv_heads or cfg.num_heads
-        hd = cfg.resolved_head_dim
-        key = (kvh, hd)
-        if key not in self.pools:
-            from repro.models.layers import COMPUTE_DTYPE
-
-            c = self.config
-            pages_per_seq = -(-self.max_len // c.page_size)
-            num_pages = c.num_pages or (
-                1 + c.max_active * pages_per_seq * self._max_attn_steps())
-            self.pools[key] = KVPool(num_pages, c.page_size, kvh, hd,
-                                     dtype=COMPUTE_DTYPE)
-        return self.pools[key]
-
     def _max_attn_steps(self) -> int:
         """Upper bound on attention-bearing steps of any registered chain."""
         n = 1
         for chain in self.zoo.chains.values():
             c = sum(1 for s in chain.steps
-                    if self.zoo.blocks[s.block_id].kind in ("layer",
-                                                            "attention"))
+                    if self.zoo.blocks[s.block_id].has_kv)
             n = max(n, c)
         return n
-
-    # -- jitted per-block executors ----------------------------------------
-
-    def _block_fn(self, block: Block, adapters: Tuple[Block, ...]):
-        key = (block.id, tuple(a.id for a in adapters))
-        fn = self._block_fns.get(key)
-        if fn is not None:
-            return fn
-        impl = self.config.attn_impl
-        if block.kind in ("layer", "attention"):
-            if block.cfg.sliding_window:
-                raise NotImplementedError(
-                    "paged decode does not support sliding-window blocks")
-
-            # donate the pool slabs: the update is a one-token scatter, so
-            # XLA can write in place instead of copying the whole pool
-            @functools.partial(jax.jit, donate_argnums=(1, 2))
-            def fn(x, k_pages, v_pages, tables, kv_len):
-                return block_decode_paged(block, x, k_pages, v_pages,
-                                          tables, kv_len, adapters=adapters,
-                                          attn_impl=impl)
-        else:
-
-            @jax.jit
-            def fn(x):
-                return apply_block(block, x, adapters=adapters)
-
-        self._block_fns[key] = fn
-        return fn
-
-    def _prefill_fn(self, block: Block, adapters: Tuple[Block, ...]):
-        """Jitted prefill per (block, adapters) — without this every prefill
-        re-lowers the attention scan from scratch (dominates admission)."""
-        key = (block.id, tuple(a.id for a in adapters))
-        fn = self._prefill_fns.get(key)
-        if fn is None:
-
-            @jax.jit
-            def fn(x):
-                return block_prefill_raw(block, x, adapters=adapters)
-
-            self._prefill_fns[key] = fn
-        return fn
 
     # -- Server API ---------------------------------------------------------
 
@@ -189,15 +143,23 @@ class BlockEngine(Server):
             raise ValueError(
                 f"request length {req.prompt_len}+{req.gen_len} exceeds "
                 f"engine max_len={self.max_len}")
-        self.pending.append((req, chain))
+        steps, used_adaptive = self._steps(chain, req.block_override)
+        self.scheduler.submit(SchedEntry(
+            rid=req.rid, app=req.app, arrival=req.arrival,
+            priority=req.priority, prompt_len=req.prompt_len,
+            gen_len=req.gen_len,
+            payload=(req, steps, used_adaptive, time.perf_counter())))
         return req.rid
 
     def step(self) -> Optional[List[ServeResult]]:
         self._admit()
+        early, self._early = self._early, []
         if not self.active:
-            return None if not self.pending else []
+            if early:
+                return early
+            return None if not self.scheduler.waiting else []
         self.stats["steps"] += 1
-        return self._decode_step()
+        return early + self._decode_step()
 
     def drain(self) -> List[ServeResult]:
         out: List[ServeResult] = []
@@ -207,148 +169,185 @@ class BlockEngine(Server):
                 return out
             out.extend(res)
 
-    # -- admission: prefill into the shared pool ----------------------------
+    # -- admission: scheduler decides, executor prefills ---------------------
+
+    def _fits(self, entry: SchedEntry) -> bool:
+        if len(self.active) >= self.config.max_active:
+            return False
+        if entry.preempted:
+            state, _ = entry.payload
+            return self.kv.can_admit(state.steps,
+                                     state.prompt_len + state.gen_len)
+        _, steps, _, _ = entry.payload
+        if entry.gen_len == 0:
+            return True  # completes at admission, touches no KV
+        return self.kv.can_admit(steps, entry.prompt_len + entry.gen_len)
 
     def _admit(self):
-        while self.pending and len(self.active) < self.config.max_active:
-            req, chain = self.pending[0]
-            steps, used_adaptive = self._steps(chain, req.block_override)
-            total = req.prompt_len + req.gen_len
-            attn_steps = [i for i, (b, _) in enumerate(steps)
-                          if b.kind in ("layer", "attention")]
-            # admission control: all slots for the request's lifetime must
-            # fit now, or the request waits (no mid-flight OOM)
-            by_pool: Dict[Tuple[int, int], int] = {}
-            for i in attn_steps:
-                pool = self._pool_for(steps[i][0])
-                key = next(k for k, p in self.pools.items() if p is pool)
-                by_pool[key] = by_pool.get(key, 0) + 1
-            if any(not self.pools[k].can_fit(total, n)
-                   for k, n in by_pool.items()):
-                if not self.active:  # nothing will free pages: hard error
-                    raise MemoryError(
-                        f"request rid={req.rid} can never fit in the KV pool")
-                return
-            self.pending.pop(0)
-            state = _ReqState(rid=req.rid, app=req.app, steps=steps,
-                              gen_len=req.gen_len, prompt_len=req.prompt_len,
-                              adaptive_blocks_used=used_adaptive,
-                              t_submit=req.arrival)
-            self._prefill(state, req.prompt_tokens)
-            self.active.append(state)
+        admitted = self.scheduler.admit(
+            fits=self._fits,
+            running=lambda: [self._entries[s.rid] for s in self.active],
+            preempt=(self._preempt_entry if self.config.preemption else None),
+            on_admit=self._place)
+        if self.scheduler.waiting and not self.active and not admitted:
+            head = self.scheduler.peek()
+            raise MemoryError(
+                f"request rid={head.rid} can never fit in the KV pool")
 
-    def _prefill(self, state: _ReqState, prompt_tokens: np.ndarray):
-        x = jnp.asarray(prompt_tokens, jnp.int32)[None]  # (1, S)
-        for i, (block, adapters) in enumerate(state.steps):
-            x, k_r, v = self._prefill_fn(block, adapters)(x)
-            if k_r is not None:
-                pool = self._pool_for(block)
-                pool.alloc(state.rid, i, state.prompt_len + state.gen_len)
-                pool.write_prefill(state.rid, i, k_r, v)
-        state.kv_len = state.prompt_len
-        logits = x[0, -1]
-        state.next_token = int(jnp.argmax(logits))
-        state.probs_last = np.asarray(
-            jax.nn.softmax(logits.astype(jnp.float32)))
-        self.stats["prefills"] += 1
+    def _place(self, entry: SchedEntry):
+        if entry.preempted:
+            self._resume(entry)
+        elif entry.gen_len == 0:
+            self._complete_empty(entry)
+        else:
+            self._start(entry)
+
+    def _start(self, entry: SchedEntry):
+        req, steps, used_adaptive, t_submit = entry.payload
+        state = _ReqState(rid=entry.rid, app=entry.app, steps=steps,
+                          gen_len=entry.gen_len, prompt_len=entry.prompt_len,
+                          prompt_tokens=np.asarray(req.prompt_tokens),
+                          adaptive_blocks_used=used_adaptive,
+                          t_submit=t_submit)
+        self.executor.prefill(state, req.prompt_tokens, self.kv)
+        entry.payload = state
+        self._entries[entry.rid] = entry
+        self.active.append(state)
+
+    def _complete_empty(self, entry: SchedEntry):
+        """gen_len=0: nothing to decode — finish at admission with empty
+        output instead of entering the batch and emitting a spurious token."""
+        _, _, used_adaptive, t_submit = entry.payload
+        t_finish = time.perf_counter()
+        self._early.append(ServeResult(
+            rid=entry.rid, app=entry.app,
+            tokens=np.zeros(0, np.int32), probs_last=None,
+            latency=t_finish - t_submit,
+            info={"adaptive_blocks_used": used_adaptive,
+                  "prompt_len": entry.prompt_len,
+                  "t_submit": t_submit, "t_finish": t_finish,
+                  "latency_s": t_finish - t_submit, "preemptions": 0}))
+
+    # -- preemption: pause a resident request under memory pressure ----------
+
+    def _preempt_entry(self, entry: SchedEntry) -> bool:
+        return self.preempt(entry.rid)
+
+    def preempt(self, rid: int, strategy: Optional[str] = None) -> bool:
+        """Evict a running request's KV slots and return it to the waiting
+        queue; it resumes (in policy order) once resources free up and
+        continues token-exact.  ``strategy``: ``spill`` copies the pages to
+        host memory, ``recalc`` drops them and replays the prefix at
+        readmission, ``None`` defers to EngineConfig (``auto`` = §5.1 cost
+        model).  Returns False if ``rid`` is not currently resident."""
+        state = next((s for s in self.active if s.rid == rid), None)
+        if state is None:
+            return False
+        strategy = strategy or self.config.preempt_strategy
+        if strategy == "auto":
+            prefix_flops = sum(b.flops_per_token()
+                               for b, _ in state.steps) * max(state.kv_len, 1)
+            strategy, _ = preempt_readmit_strategy(self.kv.kv_bytes(rid),
+                                                   prefix_flops)
+        if strategy == "spill":
+            snap = self.kv.spill(rid)
+            self.stats["spills"] += 1
+        else:
+            self.kv.free_request(rid)
+            snap = None
+        self.active.remove(state)
+        self.executor.invalidate_tables()
+        state.preemptions += 1
+        entry = self._entries.pop(rid)
+        entry.preempted = True
+        entry.payload = (state, snap)
+        self.scheduler.submit(entry)  # keeps its seq: resumes in order
+        self.stats["preemptions"] += 1
+        return True
+
+    def _resume(self, entry: SchedEntry):
+        state, snap = entry.payload
+        if snap is not None:
+            self.kv.restore(state.rid, snap,
+                            state.prompt_len + state.gen_len)
+        else:
+            # recompute-on-readmit: replay prompt + emitted tokens to rebuild
+            # KV; the pending sampled token survives on the state untouched
+            prefix = np.concatenate(
+                [np.asarray(state.prompt_tokens, np.int32),
+                 np.asarray(state.tokens, np.int32)])
+            self.executor.prefill(state, prefix, self.kv, sample=False)
+            self.stats["recalc_readmits"] += 1
+        entry.preempted = False
+        entry.payload = state
+        self._entries[state.rid] = entry
+        self.active.append(state)
+        self.executor.invalidate_tables()  # same rid, new pages
 
     # -- one decode iteration over all in-flight requests -------------------
 
     def _decode_step(self) -> List[ServeResult]:
         cap = self.config.max_block_batch
-        # emit the token chosen at the previous hop (prefill or last decode)
+        # emit the token chosen at the previous hop (prefill or last decode),
+        # then split finished from still-running in one pass
+        still_going: List[_ReqState] = []
+        finished: List[_ReqState] = []
         for s in self.active:
             s.tokens.append(s.next_token)
-        still_going = [s for s in self.active
-                       if len(s.tokens) < s.gen_len]
-        finished = [s for s in self.active if s not in still_going]
+            (still_going if len(s.tokens) < s.gen_len else finished).append(s)
         results = [self._finish(s) for s in finished]
         if finished:
-            self._table_cache.clear()
+            self.executor.invalidate_tables()
         self.active = still_going
         if not still_going:
             return results
         # run every remaining request one full token through its chain,
-        # hop-by-hop; at each hop requests sitting on the same (block,
-        # adapters) merge into one batched call, capped at max_block_batch
-        xs: Dict[int, jnp.ndarray] = {
-            s.rid: jnp.asarray([[s.next_token]], jnp.int32)
-            for s in still_going}
+        # hop-by-hop; at each hop the scheduler's per-(block, adapters) run
+        # queues merge requests sitting on the same block into batched
+        # calls, capped at max_block_batch (paper §5.2)
+        xs = self.executor.seed_tokens(still_going)
         cursors = {s.rid: 0 for s in still_going}
         by_rid = {s.rid: s for s in still_going}
+        hop = 0
         while True:
-            frontier: Dict[Tuple, List[int]] = {}
+            keys: List[Tuple] = []
             for s in still_going:
-                c = cursors[s.rid]
-                if c >= len(s.steps):
+                if hop >= len(s.steps):
                     continue
-                block, adapters = s.steps[c]
-                key = (block.id, tuple(a.id for a in adapters), c)
-                frontier.setdefault(key[:2], []).append(s.rid)
-            if not frontier:
+                block, adapters = s.steps[hop]
+                key = (block.id, tuple(a.id for a in adapters))
+                self.scheduler.enqueue(key, 0.0, s)
+                keys.append(key)
+            if not keys:
                 break
-            for (bid, aids), rids in frontier.items():
-                for chunk_start in range(0, len(rids), cap):
-                    chunk = rids[chunk_start:chunk_start + cap]
-                    self._run_group(chunk, by_rid, cursors, xs)
-            for rid in list(cursors):
-                cursors[rid] += 1
-        # chain finished: lm_head output -> next token (+ final-step probs
-        # for requests emitting their last token next step).  One batched
-        # argmax/softmax per step keeps host round-trips off the hot path.
-        by_vocab: Dict[int, List[_ReqState]] = {}
-        for s in still_going:
-            by_vocab.setdefault(xs[s.rid].shape[-1], []).append(s)
-        for group in by_vocab.values():
-            logits = jnp.concatenate([xs[s.rid] for s in group], axis=0)[:, 0]
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
-            last = [i for i, s in enumerate(group)
-                    if len(s.tokens) + 1 >= s.gen_len]
-            if last:
-                probs = np.asarray(jax.nn.softmax(
-                    logits[jnp.asarray(last)].astype(jnp.float32), axis=-1))
-                for j, i in enumerate(last):
-                    group[i].probs_last = probs[j]
-            for i, s in enumerate(group):
-                s.next_token = int(nxt[i])
-                s.kv_len += 1
-                self.stats["decode_tokens"] += 1
+            for key in dict.fromkeys(keys):
+                while True:
+                    batch = self.scheduler.form_batch(key, 0.0, cap)
+                    if not batch:
+                        break
+                    self.executor.run_group([b.rid for b in batch], by_rid,
+                                            cursors, xs, self.kv)
+            hop += 1
+            for rid in cursors:
+                cursors[rid] = hop
+        # chain finished: lm_head output -> next token
+        self.executor.sample_step(still_going, xs)
         return results
 
-    def _run_group(self, rids: List[int], by_rid, cursors, xs):
-        """Batched execution of one (block, adapters) group at one hop."""
-        s0 = by_rid[rids[0]]
-        cursor = cursors[s0.rid]
-        block, adapters = s0.steps[cursor]
-        fn = self._block_fn(block, adapters)
-        x = jnp.concatenate([xs[r] for r in rids], axis=0)
-        self.stats["group_calls"] += 1
-        if block.kind in ("layer", "attention"):
-            pool = self._pool_for(block)
-            tkey = (tuple(rids), cursor)
-            tables = self._table_cache.get(tkey)
-            if tables is None:
-                tables = jnp.asarray(pool.block_table(
-                    [(r, cursors[r]) for r in rids]))
-                self._table_cache[tkey] = tables
-            kv_len = jnp.asarray([by_rid[r].kv_len for r in rids], jnp.int32)
-            out, pool.k_pages, pool.v_pages = fn(
-                x, pool.k_pages, pool.v_pages, tables, kv_len)
-        else:
-            out = fn(x)
-        for i, r in enumerate(rids):
-            xs[r] = out[i:i + 1]
-
     def _finish(self, s: _ReqState) -> ServeResult:
-        for pool in self.pools.values():
-            for key in [k for k in pool.slots if k[0] == s.rid]:
-                pool.free(*key)
+        self.kv.free_request(s.rid)
+        self._entries.pop(s.rid, None)
+        t_finish = time.perf_counter()
         return ServeResult(
             rid=s.rid, app=s.app,
             tokens=np.asarray(s.tokens, np.int32),
             probs_last=s.probs_last,
+            latency=t_finish - s.t_submit,
             info={"adaptive_blocks_used": s.adaptive_blocks_used,
-                  "prompt_len": s.prompt_len})
+                  "prompt_len": s.prompt_len,
+                  "t_submit": s.t_submit, "t_finish": t_finish,
+                  "latency_s": t_finish - s.t_submit,
+                  "preemptions": s.preemptions})
 
     # -- legacy batch API (sequential semantics preserved) -------------------
 

@@ -1,0 +1,168 @@
+"""Numerics layer of the serving stack (DESIGN.md §2).
+
+``BlockExecutor`` owns everything that touches device compute for the
+real-execution plane: the jitted per-(block, adapters) function caches
+(decode and prefill), batched group execution over the shared paged KV
+pools (cross-app batching on shared foundation blocks, paper §5.2), block
+table staging, and sampling.  It holds no request lifecycle: the shared
+``Scheduler`` decides *what* runs and the ``KVManager`` decides *where*
+KV lives; the executor decides *how* it runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocks import (
+    Block,
+    apply_block,
+    block_decode_paged,
+    block_prefill_raw,
+)
+from repro.serving.kv_pool import KVManager
+
+
+class BlockExecutor:
+    """Jitted per-block execution, group batching and sampling."""
+
+    def __init__(self, attn_impl: str = "auto",
+                 stats: Optional[dict] = None):
+        self.attn_impl = attn_impl
+        self.stats = stats if stats is not None else {
+            "prefills": 0, "decode_tokens": 0, "group_calls": 0}
+        self._block_fns: Dict[Tuple, object] = {}
+        self._prefill_fns: Dict[Tuple, object] = {}
+        # slots are fixed while a request stays resident, so a group's block
+        # table is constant between membership changes: cache per
+        # (rids, hop); the engine invalidates on finish/preempt/restore
+        self._table_cache: Dict[Tuple, jnp.ndarray] = {}
+
+    def invalidate_tables(self) -> None:
+        self._table_cache.clear()
+
+    # -- jitted per-block executors -----------------------------------------
+
+    def block_fn(self, block: Block, adapters: Tuple[Block, ...]):
+        key = (block.id, tuple(a.id for a in adapters))
+        fn = self._block_fns.get(key)
+        if fn is not None:
+            return fn
+        impl = self.attn_impl
+        if block.has_kv:
+            if block.cfg.sliding_window:
+                raise NotImplementedError(
+                    "paged decode does not support sliding-window blocks")
+
+            # donate the pool slabs: the update is a one-token scatter, so
+            # XLA can write in place instead of copying the whole pool
+            @functools.partial(jax.jit, donate_argnums=(1, 2))
+            def fn(x, k_pages, v_pages, tables, kv_len):
+                return block_decode_paged(block, x, k_pages, v_pages,
+                                          tables, kv_len, adapters=adapters,
+                                          attn_impl=impl)
+        else:
+
+            @jax.jit
+            def fn(x):
+                return apply_block(block, x, adapters=adapters)
+
+        self._block_fns[key] = fn
+        return fn
+
+    def prefill_fn(self, block: Block, adapters: Tuple[Block, ...]):
+        """Jitted prefill per (block, adapters) — without this every prefill
+        re-lowers the attention scan from scratch (dominates admission)."""
+        key = (block.id, tuple(a.id for a in adapters))
+        fn = self._prefill_fns.get(key)
+        if fn is None:
+
+            @jax.jit
+            def fn(x):
+                return block_prefill_raw(block, x, adapters=adapters)
+
+            self._prefill_fns[key] = fn
+        return fn
+
+    # -- prefill -------------------------------------------------------------
+
+    def prefill(self, state, tokens: np.ndarray, kv: KVManager, *,
+                sample: bool = True) -> None:
+        """Run ``tokens`` through the chain, allocating whole-lifetime slots
+        and scattering raw K/V into the pools.  With ``sample=False`` the
+        lm_head output is discarded — the recompute-on-readmit path rebuilds
+        KV for an already-sampled prefix and must keep the pending token."""
+        x = jnp.asarray(tokens, jnp.int32)[None]  # (1, S)
+        for i, (block, adapters) in enumerate(state.steps):
+            x, k_r, v = self.prefill_fn(block, adapters)(x)
+            if k_r is not None:
+                _, pool = kv.pool_for(block)
+                pool.alloc(state.rid, i, state.prompt_len + state.gen_len)
+                pool.write_prefill(state.rid, i, k_r, v)
+        state.kv_len = len(tokens)
+        if sample:
+            logits = x[0, -1]
+            state.next_token = int(jnp.argmax(logits))
+            state.probs_last = np.asarray(
+                jax.nn.softmax(logits.astype(jnp.float32)))
+        self.stats["prefills"] += 1
+
+    # -- decode: batched group execution ------------------------------------
+
+    def seed_tokens(self, states) -> Dict[int, jnp.ndarray]:
+        """Per-request (1, 1) input carrying the pending sampled token."""
+        return {s.rid: jnp.asarray([[s.next_token]], jnp.int32)
+                for s in states}
+
+    def run_group(self, rids: List[int], by_rid, cursors, xs,
+                  kv: KVManager) -> None:
+        """Batched execution of one (block, adapters) group at one hop."""
+        s0 = by_rid[rids[0]]
+        cursor = cursors[s0.rid]
+        block, adapters = s0.steps[cursor]
+        fn = self.block_fn(block, adapters)
+        x = jnp.concatenate([xs[r] for r in rids], axis=0)
+        self.stats["group_calls"] += 1
+        if block.has_kv:
+            _, pool = kv.pool_for(block)
+            tkey = (tuple(rids), cursor)
+            tables = self._table_cache.get(tkey)
+            if tables is None:
+                tables = jnp.asarray(pool.block_table(
+                    [(r, cursors[r]) for r in rids]))
+                self._table_cache[tkey] = tables
+            kv_len = jnp.asarray([by_rid[r].kv_len for r in rids], jnp.int32)
+            out, pool.k_pages, pool.v_pages = fn(
+                x, pool.k_pages, pool.v_pages, tables, kv_len)
+        else:
+            out = fn(x)
+        for i, r in enumerate(rids):
+            xs[r] = out[i:i + 1]
+
+    # -- sampling ------------------------------------------------------------
+
+    def sample_step(self, states, xs) -> None:
+        """Greedy next-token selection over the lm_head outputs — one
+        batched argmax/softmax per step keeps host round-trips off the hot
+        path.  Final-step probabilities are kept for requests emitting
+        their last token next step (adaptive-serving quality, Fig. 20)."""
+        by_vocab: Dict[int, list] = {}
+        for s in states:
+            by_vocab.setdefault(xs[s.rid].shape[-1], []).append(s)
+        for group in by_vocab.values():
+            logits = jnp.concatenate([xs[s.rid] for s in group], axis=0)[:, 0]
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            last = [i for i, s in enumerate(group)
+                    if len(s.tokens) + 1 >= s.gen_len]
+            if last:
+                probs = np.asarray(jax.nn.softmax(
+                    logits[jnp.asarray(last)].astype(jnp.float32), axis=-1))
+                for j, i in enumerate(last):
+                    group[i].probs_last = probs[j]
+            for i, s in enumerate(group):
+                s.next_token = int(nxt[i])
+                s.kv_len += 1
+                self.stats["decode_tokens"] += 1

@@ -1,11 +1,18 @@
-"""Slot-based paged KV pool shared across chains (DESIGN.md §2).
+"""KV manager: slot-based paged KV pools shared across chains, with
+preemption (DESIGN.md §2).
 
-One pool per (kv_heads, head_dim, dtype) signature holds two page slabs
-``(num_pages, page_size, KVH, hd)`` for K and V.  Every attention-bearing
-chain step of every in-flight request owns a run of page ids (a *slot*)
-carved out of the same slab, so requests from different apps — and the
-shared foundation blocks they batch on — draw from one memory budget, the
-way vLLM-style paged attention manages a single device cache.
+One ``KVPool`` per (kv_heads, head_dim, dtype) signature holds two page
+slabs ``(num_pages, page_size, KVH, hd)`` for K and V.  Every
+attention-bearing chain step of every in-flight request owns a run of
+page ids (a *slot*) carved out of the same slab, so requests from
+different apps — and the shared foundation blocks they batch on — draw
+from one memory budget, the way vLLM-style paged attention manages a
+single device cache.
+
+``KVManager`` coordinates the pools as one memory plane: admission
+planning across signatures, slot **preemption** (spill the pages to host
+memory, or drop them for recompute-on-readmit — the paper's §5.1
+transfer-vs-recalc decision applied to a single host), and restore.
 
 Page 0 is reserved as a scratch ("trash") page: group batching pads ragged
 block tables with it, and masked lanes of padded rows read/write there
@@ -37,6 +44,8 @@ class KVPool:
         assert num_pages >= 2, "pool needs at least the trash page + one slot"
         self.page_size = page_size
         self.num_pages = num_pages
+        self.kv_heads = kv_heads
+        self.head_dim = head_dim
         shape = (num_pages, page_size, kv_heads, head_dim)
         self.k_pages = jnp.zeros(shape, dtype)
         self.v_pages = jnp.zeros(shape, dtype)
@@ -51,6 +60,12 @@ class KVPool:
     @property
     def free_pages(self) -> int:
         return len(self._free)
+
+    @property
+    def page_bytes(self) -> int:
+        """K+V bytes held by one page."""
+        return 2 * (self.page_size * self.kv_heads * self.head_dim
+                    * jnp.dtype(self.k_pages.dtype).itemsize)
 
     @property
     def used_pages(self) -> int:
@@ -115,3 +130,107 @@ class KVPool:
         idx = jnp.asarray(slot.pages[:npages], jnp.int32)
         self.k_pages = self.k_pages.at[idx].set(kp.astype(self.k_pages.dtype))
         self.v_pages = self.v_pages.at[idx].set(vp.astype(self.v_pages.dtype))
+
+
+# ---------------------------------------------------------------------------
+# manager: the pools as one coordinated memory plane
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class KVSnapshot:
+    """Host-side copy of a preempted request's pages (spill strategy).
+
+    Keyed by (pool signature, chain step); each value is the (K, V) page
+    stack exactly as it sat in the device slabs."""
+    pages: Dict[Tuple[Tuple[int, int], int],
+                Tuple[np.ndarray, np.ndarray]] = field(default_factory=dict)
+    kv_bytes: int = 0
+
+
+class KVManager:
+    """Coordinates one ``KVPool`` per KV signature under a shared budget.
+
+    The serving engine's memory layer: admission planning (can a request's
+    whole slot footprint fit *now*), allocation bookkeeping, and slot
+    preemption/restore so long requests can be paused under memory
+    pressure instead of blocking the queue (lifting the
+    "all slots allocated at admission forever" restriction)."""
+
+    def __init__(self, page_size: int, num_pages: int, dtype=jnp.bfloat16):
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.dtype = dtype
+        self.pools: Dict[Tuple[int, int], KVPool] = {}
+
+    def pool_for(self, block) -> Tuple[Tuple[int, int], KVPool]:
+        """The (signature key, pool) a block's KV slots live in; pools are
+        created lazily on first use of a signature."""
+        key = block.kv_signature
+        pool = self.pools.get(key)
+        if pool is None:
+            pool = self.pools[key] = KVPool(self.num_pages, self.page_size,
+                                            key[0], key[1], dtype=self.dtype)
+        return key, pool
+
+    # -- admission planning --------------------------------------------------
+
+    def plan(self, steps) -> Dict[Tuple[int, int], int]:
+        """Slots needed per pool signature for one request's resolved chain
+        steps (``[(block, adapters), ...]``)."""
+        need: Dict[Tuple[int, int], int] = {}
+        for block, _ in steps:
+            if block.has_kv:
+                key, _ = self.pool_for(block)
+                need[key] = need.get(key, 0) + 1
+        return need
+
+    def can_admit(self, steps, tokens: int) -> bool:
+        """Whole-lifetime footprint check: every slot the request will ever
+        need (``tokens`` = prompt + full generation budget) fits now."""
+        return all(self.pools[k].can_fit(tokens, n)
+                   for k, n in self.plan(steps).items())
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def free_request(self, rid: int) -> None:
+        for pool in self.pools.values():
+            pool.free_request(rid)
+
+    def kv_bytes(self, rid: int) -> int:
+        """Device bytes currently pinned by a request across all pools."""
+        total = 0
+        for pool in self.pools.values():
+            for (r, _), slot in pool.slots.items():
+                if r == rid:
+                    total += len(slot.pages) * pool.page_bytes
+        return total
+
+    # -- preemption ----------------------------------------------------------
+
+    def spill(self, rid: int) -> KVSnapshot:
+        """Copy the request's pages to host memory and free its slots."""
+        snap = KVSnapshot()
+        for key, pool in self.pools.items():
+            for r, step in [k for k in pool.slots if k[0] == rid]:
+                slot = pool.slots[(r, step)]
+                idx = jnp.asarray(slot.pages, jnp.int32)
+                snap.pages[(key, step)] = (np.asarray(pool.k_pages[idx]),
+                                           np.asarray(pool.v_pages[idx]))
+                snap.kv_bytes += len(slot.pages) * pool.page_bytes
+                pool.free(r, step)
+        return snap
+
+    def restore(self, rid: int, snap: KVSnapshot, tokens: int) -> None:
+        """Re-allocate slots (possibly on different pages) and write the
+        spilled page contents back into the device slabs."""
+        for (key, step), (k_np, v_np) in snap.pages.items():
+            pool = self.pools[key]
+            slot = pool.alloc(rid, step, tokens)
+            assert len(slot.pages) == k_np.shape[0], \
+                "restore allocated a different page count than was spilled"
+            idx = jnp.asarray(slot.pages, jnp.int32)
+            pool.k_pages = pool.k_pages.at[idx].set(
+                jnp.asarray(k_np, pool.k_pages.dtype))
+            pool.v_pages = pool.v_pages.at[idx].set(
+                jnp.asarray(v_np, pool.v_pages.dtype))

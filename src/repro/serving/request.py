@@ -1,8 +1,8 @@
 """Requests and multi-tenant workload traces (paper §7.1)."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, TYPE_CHECKING
+from dataclasses import dataclass
+from typing import List, Optional, TYPE_CHECKING
 
 import numpy as np
 
@@ -17,6 +17,7 @@ class Request:
     arrival: float
     prompt_len: int
     gen_len: int
+    priority: int = 0
     # progress
     tokens_done: int = 0  # generated tokens so far
     hop: int = 0  # current position in the chain for this iteration
@@ -79,5 +80,6 @@ def as_serve_requests(trace: List[Request], *, vocab_size: int = 0,
         out.append(ServeRequest(app=r.app, gen_len=r.gen_len,
                                 prompt_tokens=tokens,
                                 prompt_len=r.prompt_len,
-                                arrival=r.arrival, rid=r.rid))
+                                arrival=r.arrival, priority=r.priority,
+                                rid=r.rid))
     return out

@@ -1,9 +1,11 @@
 """BlockLLM online serving system (paper §5) + PM/PS baselines (§7.1).
 
-The scheduler, agents, per-block queues, KV-ownership registry, speculation
-and placement logic are the real control plane; time advances through the
-§5.1/§5.3 cost model (discrete-event).  The same scheduler/agent classes are
-reused by the real-execution engine at laptop scale (repro.serving.engine).
+The control plane is the shared three-layer core (DESIGN.md §2): request
+admission and every per-instance run queue live in the same
+``repro.serving.scheduler.Scheduler`` class the real-execution
+``BlockEngine`` drives; this module adds the cluster model — placement,
+KV-ownership registry, speculation — and advances time through the
+§5.1/§5.3 cost model (discrete-event).
 
 Modes: "blockllm" | "pm" (per-model provisioning) | "ps" (parameter sharing,
 S-LoRA-like merged engine with branching overhead).
@@ -14,14 +16,14 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from collections import defaultdict, deque
+from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.serving.api import ServeRequest, ServeResult, Server
-from repro.serving.cluster import Cluster, HBM_BW, paper_cluster
+from repro.serving.cluster import Cluster, paper_cluster
 from repro.serving.cost_model import (
     BlockCost,
     best_kv_strategy,
@@ -29,6 +31,7 @@ from repro.serving.cost_model import (
     t_revisit_owner,
 )
 from repro.serving.request import Request
+from repro.serving.scheduler import SchedEntry, Scheduler
 
 TOKEN_BYTES = 8192  # bytes shipped per generated token (hidden-state row)
 
@@ -138,6 +141,7 @@ def build_serving_config(n_foundations: int = 3, n_apps: int = 20,
 @dataclass
 class SchedulerConfig:
     mode: str = "blockllm"
+    policy: str = "fcfs"                  # admission order: fcfs | priority
     adaptive: bool = True                 # O1 (§5.3)
     kv_policy: str = "owner"              # owner | recalc | least-busy (§5.1/Fig 21)
     speculation: bool = True              # §5.2
@@ -153,6 +157,7 @@ class SchedulerConfig:
 
     # single source of truth for CLI plumbing: every field becomes a flag
     _ARG_CHOICES = {"mode": ("blockllm", "pm", "ps"),
+                    "policy": ("fcfs", "priority"),
                     "kv_policy": ("owner", "recalc", "least-busy"),
                     "placement": ("locality", "fragmentation")}
 
@@ -184,11 +189,13 @@ class SchedulerConfig:
 
 @dataclass
 class Instance:
+    """One placed block copy.  Its run queue lives in the shared
+    ``Scheduler`` keyed by ``iid`` — the instance only tracks service
+    state."""
     iid: int
     block_id: str
     device: int
     busy: bool = False
-    queue: deque = field(default_factory=deque)  # (ready_time, request)
     speculated: bool = False
     countdowns: Dict[int, float] = field(default_factory=dict)  # rid -> eta
     last_used: float = 0.0
@@ -206,6 +213,9 @@ class Simulation(Server):
         self.sched = sched
         self.cluster = cluster or paper_cluster()
         self.rng = np.random.RandomState(sched.seed)
+        # the same Scheduler class the real-execution BlockEngine drives:
+        # waiting-queue admission + per-instance run queues (keyed by iid)
+        self.scheduler = Scheduler(policy=sched.policy)
         self.instances: Dict[int, Instance] = {}
         self.by_block: Dict[str, List[int]] = defaultdict(list)
         # chain adjacency prior for locality placement (§5.3)
@@ -259,7 +269,7 @@ class Simulation(Server):
         """Evict the least-recently-used idle instance (model switching —
         the Fig. 5 overhead per-model provisioning pays constantly)."""
         victims = [i for i in self.instances.values()
-                   if not i.busy and not i.queue
+                   if not i.busy and not self.scheduler.queue_len(i.iid)
                    and i.block_id != protect_block]
         if not victims:
             return False
@@ -267,6 +277,7 @@ class Simulation(Server):
         dev = self.cluster.devices[v.device]
         size = dev.resident_blocks.pop(f"{v.block_id}#{v.iid}", 0)
         self.by_block[v.block_id].remove(v.iid)
+        self.scheduler.drop_queue(v.iid)
         del self.instances[v.iid]
         self.stats["evictions"] += 1
         self.stats["switch_bytes"] += size
@@ -308,7 +319,7 @@ class Simulation(Server):
 
     def _queue_time(self, inst: Instance) -> float:
         cost = self.cfg.blocks[inst.block_id].cost
-        pend = len(inst.queue) + (1 if inst.busy else 0)
+        pend = self.scheduler.queue_len(inst.iid) + (1 if inst.busy else 0)
         return pend * cost.compute_time(1, 1) * 4  # rough per-batch estimate
 
     def candidates(self, req: Request, block_id: str) -> List[int]:
@@ -326,7 +337,7 @@ class Simulation(Server):
             inst = self.place_instance(block_id)
             if inst is None:  # no memory anywhere: queue on a busy peer
                 cands = [min(self.instances,
-                             key=lambda i: len(self.instances[i].queue))]
+                             key=lambda i: self.scheduler.queue_len(i))]
             else:
                 cands = [inst.iid]
         kv_key = (req.rid, block_id)
@@ -410,32 +421,21 @@ class Simulation(Server):
         self.kv_owner.setdefault(kv_key, (inst.device, kv_bytes))
         ready = max(ready, inst.loading_until)
         inst.last_used = self.now
-        inst.queue.append((ready, req))
+        self.scheduler.enqueue(inst.iid, ready, req)
         heapq.heappush(self.events,
                        (ready, next(self._seq), "enqueue", (inst.iid, req)))
         return inst
 
     # -- instance service loop ----------------------------------------------
 
-    def _form_batch(self, inst: Instance) -> List[Request]:
-        """FIFO + priority for returning KV owners (countdown, §6)."""
-        ready = [i for i, (rt, r) in enumerate(inst.queue) if rt <= self.now]
-        if not ready:
-            return []
-        idxs = sorted(
-            ready,
-            key=lambda i: (0 if inst.queue[i][1].rid in inst.countdowns else 1,
-                           inst.queue[i][0]))
-        take = idxs[: self.sched.max_batch]
-        batch = [inst.queue[i][1] for i in take]
-        for i in sorted(take, reverse=True):
-            del inst.queue[i]
-        return batch
-
     def _service(self, inst: Instance):
         if inst.busy:
             return
-        batch = self._form_batch(inst)
+        # FIFO + priority for returning KV owners (countdown, §6) — the
+        # batch-forming policy is the scheduler's, shared with the engine
+        batch: List[Request] = self.scheduler.form_batch(
+            inst.iid, self.now, self.sched.max_batch,
+            prioritize=frozenset(inst.countdowns))
         if not batch:
             return
         inst.busy = True
@@ -501,7 +501,7 @@ class Simulation(Server):
     def _rescale(self):
         # scale out hot blocks
         for bid, iids in list(self.by_block.items()):
-            qlen = sum(len(self.instances[i].queue) for i in iids)
+            qlen = sum(self.scheduler.queue_len(i) for i in iids)
             if qlen > self.sched.scale_queue_threshold:
                 self.place_instance(bid)
         # refresh speculation set: top-k by queue completion time, skipping
@@ -510,7 +510,7 @@ class Simulation(Server):
             return
         final_blocks = {c.blocks[-1] for c in self.cfg.chains.values()}
         load = sorted(self.instances.values(),
-                      key=lambda i: -(len(i.queue)))
+                      key=lambda i: -self.scheduler.queue_len(i.iid))
         k = max(1, int(len(self.instances) * self.sched.spec_top_frac))
         chosen = set()
         chain_pos = {}
@@ -538,10 +538,16 @@ class Simulation(Server):
             rid = req.rid if req.rid is not None else next(self._rid)
             req = Request(rid=rid, app=req.app, arrival=req.arrival,
                           prompt_len=req.prompt_len or 1,
-                          gen_len=req.gen_len)
+                          gen_len=req.gen_len, priority=req.priority)
         heapq.heappush(self.events, (req.arrival, next(self._seq),
                                      "arrival", req))
         return req.rid
+
+    def _cluster_fits(self, entry: SchedEntry) -> bool:
+        """Cluster-level admission hook.  The modeled cluster admits every
+        arrival — memory pressure is absorbed by placement/eviction
+        (place_instance) rather than by holding requests back."""
+        return True
 
     def step(self) -> Optional[List[ServeResult]]:
         """Process one discrete event; returns requests completed by it."""
@@ -560,7 +566,13 @@ class Simulation(Server):
             self._next_rescale += self.sched.rescale_period
         if kind == "arrival":
             req: Request = payload
-            self.dispatch(req, self.cfg.chains[req.app].blocks[0], None)
+            self.scheduler.submit(SchedEntry(
+                rid=req.rid, app=req.app, arrival=req.arrival,
+                priority=req.priority, prompt_len=req.prompt_len,
+                gen_len=req.gen_len, payload=req))
+            for entry in self.scheduler.admit(fits=self._cluster_fits):
+                r = entry.payload
+                self.dispatch(r, self.cfg.chains[r.app].blocks[0], None)
         elif kind == "enqueue":
             iid, req = payload
             self._service(self.instances[iid])

@@ -1,10 +1,9 @@
 """Continuous batching: parity with sequential generation, KV-pool slot
 lifecycle, and the unified Server API over both backends."""
-import jax
 import numpy as np
 import pytest
 
-from repro.serving.api import ServeRequest, ServeResult, Server
+from repro.serving.api import ServeRequest, Server
 
 
 @pytest.fixture(scope="module")

@@ -1,7 +1,6 @@
 """Equivalence metrics (paper §4.1, Figs. 3 & 10)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.equivalence import (

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_reduced_config, list_configs
+from repro.configs import get_reduced_config
 from repro.models.model import build_model
 
 ARCHS = [

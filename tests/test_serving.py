@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.serving.request import Request, generate_trace
+from repro.serving.request import generate_trace
 from repro.serving.simulator import (
     SchedulerConfig,
     Simulation,

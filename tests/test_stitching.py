@@ -1,7 +1,6 @@
 """Stitching blocks (paper §4.3, Table 3)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config

@@ -1,7 +1,5 @@
 """Block surrogates via structured pruning (paper §5.2, Table 4)."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config

@@ -1,8 +1,6 @@
 """End-to-end behaviour tests for BlockLLM: offline zoo -> online serving
 -> evaluation metrics, exercising the whole public API surface."""
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import SHAPES, get_config, get_reduced_config, list_configs
 

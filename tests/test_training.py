@@ -1,11 +1,9 @@
 """Training substrate: loss decreases, grad accumulation equivalence,
 compression, checkpoint/restart + elastic resharding."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_reduced_config
 from repro.data.pipeline import DataConfig, TokenPipeline

@@ -6,7 +6,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.core import peft
-from repro.core.blocks import BlockChain, apply_block, run_chain
+from repro.core.blocks import run_chain
 from repro.core.zoo import BlockZoo
 from repro.models.model import build_model
 
