@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate for CI (DESIGN.md §7).
+
+Compares the freshly produced ``BENCH_serving.json`` (written by
+``scripts/smoke.sh`` into the workspace) against the committed baseline
+(read via ``git show`` so the smoke run overwriting the workspace file
+cannot mask a regression).  Fails when batched decode throughput drops
+more than ``--tolerance`` (default 30%) below the committed number —
+wide enough to absorb shared-runner noise, tight enough to catch a
+dispatch-path regression (the fused megastep is worth >2x).
+
+    python scripts/check_bench_regression.py [--fresh BENCH_serving.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+KEY = "batched_tokens_per_s"
+
+
+def committed_report(ref: str, path: str) -> dict:
+    out = subprocess.run(["git", "show", f"{ref}:{path}"],
+                         capture_output=True, text=True)
+    if out.returncode != 0:
+        return {}
+    return json.loads(out.stdout)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default="BENCH_serving.json")
+    ap.add_argument("--baseline-ref", default="HEAD")
+    ap.add_argument("--baseline-path", default="BENCH_serving.json")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional drop below the baseline")
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    base = committed_report(args.baseline_ref, args.baseline_path)
+    if KEY not in base:
+        print(f"no committed baseline at "
+              f"{args.baseline_ref}:{args.baseline_path}; skipping gate")
+        return 0
+
+    floor = base[KEY] * (1.0 - args.tolerance)
+    got = fresh[KEY]
+    print(f"{KEY}: fresh={got:.2f} committed={base[KEY]:.2f} "
+          f"floor={floor:.2f} (tolerance {args.tolerance:.0%})")
+    for extra in ("group_calls_per_step", "host_syncs", "step_wall_p50_s"):
+        if extra in fresh:
+            print(f"  {extra}: fresh={fresh[extra]} "
+                  f"committed={base.get(extra, 'n/a')}")
+    if got < floor:
+        print(f"FAIL: {KEY} dropped more than {args.tolerance:.0%} below "
+              "the committed baseline")
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -247,10 +247,7 @@ def block_decode_paged(block: Block, x, k_pages, v_pages, block_tables,
     p = block.params
     if block.kind not in ("layer", "attention"):
         return (apply_block(block, x, adapters=adapters), k_pages, v_pages)
-    from repro.kernels.paged_attention.ops import (
-        paged_attention,
-        write_token_to_pages,
-    )
+    from repro.kernels.paged_attention.ops import paged_decode_step
 
     positions = kv_len[:, None]
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
@@ -260,10 +257,9 @@ def block_decode_paged(block: Block, x, k_pages, v_pages, block_tables,
     q, k, v = _peft_qkv(h, q, k, v, adapters)
     q = L.apply_rope(q, positions, cfg.rope_theta)
     k = L.apply_rope(k, positions, cfg.rope_theta)
-    k_pages, v_pages = write_token_to_pages(
-        k_pages, v_pages, block_tables, kv_len, k[:, 0], v[:, 0])
-    o = paged_attention(q[:, 0], k_pages, v_pages, block_tables, kv_len + 1,
-                        impl=attn_impl)
+    o, k_pages, v_pages = paged_decode_step(
+        q[:, 0], k[:, 0], v[:, 0], k_pages, v_pages, block_tables, kv_len,
+        impl=attn_impl)
     o = jnp.einsum("bhk,hkd->bd", o.astype(x.dtype),
                    p["wo"].astype(x.dtype))[:, None]
     out = x + o
@@ -288,6 +284,89 @@ def _peft_qkv(h, q, k, v, adapters):
             k = k + a.params["bk"].astype(h.dtype)
             v = v + a.params["bv"].astype(h.dtype)
     return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# chain-level fused execution (one computation for all hops of a chain)
+# ---------------------------------------------------------------------------
+
+
+def chain_signature(steps) -> Tuple:
+    """Fusion key for a resolved chain: the ordered tuple of
+    (block id, adapter ids) hops.  Requests with identical signatures run
+    the same computation and can share one fused megastep."""
+    return tuple((block.id, tuple(a.id for a in adapters))
+                 for block, adapters in steps)
+
+
+def chain_decode_fused(steps, pool_index, tokens, pools_k, pools_v, tables,
+                       kv_len, *, attn_impl: str = "auto"):
+    """One full-chain decode megastep for a batch of sequences, designed to
+    be jitted once per chain signature (DESIGN.md §2).
+
+    Runs embedding -> every attention/MLP/adapter hop (paged-KV decode with
+    in-computation single-token K/V scatter) -> lm_head -> greedy argmax +
+    softmax, with no Python dispatch between hops.
+
+    tokens: (B,) pending token ids; pools_k/pools_v: tuples of page slabs,
+    one per KV-pool signature the chain touches; pool_index[i]: which slab
+    the i-th attention hop uses; tables: tuple of (B, n) page tables, one
+    per attention hop; kv_len: (B,) tokens already cached.
+
+    Returns (next_tokens, probs, pools_k, pools_v, kv_len + 1).
+    """
+    x = tokens[:, None]  # (B, 1) ids; the embed hop maps them to hidden
+    pools_k, pools_v = list(pools_k), list(pools_v)
+    hop = 0
+    for block, adapters in steps:
+        if block.has_kv:
+            pi = pool_index[hop]
+            x, pools_k[pi], pools_v[pi] = block_decode_paged(
+                block, x, pools_k[pi], pools_v[pi], tables[hop], kv_len,
+                adapters=adapters, attn_impl=attn_impl)
+            hop += 1
+        else:
+            x = apply_block(block, x, adapters=adapters)
+        # pin hop boundaries — the hidden state AND the updated slabs:
+        # without this XLA fuses across blocks (including a hop's K/V
+        # scatter into the next hop's reads) and the low-precision rounding
+        # diverges from the per-hop oracle, flipping near-tie argmaxes;
+        # dispatch stays a single device call either way
+        x, pools_k, pools_v = jax.lax.optimization_barrier(
+            (x, pools_k, pools_v))
+    logits = x[:, 0]  # (B, V)
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return next_tokens, probs, tuple(pools_k), tuple(pools_v), kv_len + 1
+
+
+def chain_prefill_fused(steps, tokens, lens):
+    """Batched multi-request prefill through a whole chain (one jitted call
+    per (chain signature, length bucket) instead of one per request).
+
+    tokens: (B, S) ids right-padded to the bucket length; lens: (B,) true
+    prompt lengths.  Causality makes the padded tail inert for every valid
+    position, so per-row results match the unpadded single-request path.
+
+    Returns (next_tokens, probs, kvs) where kvs[i] = (k_r, v) raw rotated
+    K/V (B, S, KVH, hd) for the i-th attention hop.
+    """
+    x = tokens
+    kvs = []
+    for block, adapters in steps:
+        x, k_r, v = block_prefill_raw(block, x, adapters=adapters)
+        if k_r is not None:
+            kvs.append((k_r, v))
+        # pin hop boundaries, exactly as in chain_decode_fused: the KV this
+        # writes seeds every later decode step, and a 1-ulp rounding
+        # difference from cross-block fusion flips near-tie argmaxes
+        # downstream
+        x, kvs = jax.lax.optimization_barrier((x, kvs))
+    B = x.shape[0]
+    logits = x[jnp.arange(B), lens - 1]  # last valid position per row
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return next_tokens, probs, kvs
 
 
 @dataclass

@@ -22,6 +22,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _paged_kernel(block_tables, seq_lens,  # scalar-prefetch
                   q_ref, k_ref, v_ref, o_ref,
@@ -110,7 +114,7 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KVH, G, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(block_tables, seq_lens, qg, k_pages, v_pages)

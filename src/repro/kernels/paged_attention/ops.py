@@ -31,3 +31,19 @@ def write_token_to_pages(k_pages, v_pages, block_tables, positions, k_new, v_new
     k_pages = k_pages.at[page_idx, slot].set(k_new.astype(k_pages.dtype))
     v_pages = v_pages.at[page_idx, slot].set(v_new.astype(v_pages.dtype))
     return k_pages, v_pages
+
+
+def paged_decode_step(q, k_new, v_new, k_pages, v_pages, block_tables,
+                      kv_len, *, impl: str = "auto"):
+    """One fused single-token decode step: scatter the new token's K/V into
+    the pages, then attend over them (the scatter and the attention lower
+    into one computation when called under an enclosing jit).
+
+    q/k_new/v_new: (B, H, hd) / (B, KVH, hd); kv_len: (B,) tokens already
+    cached.  Returns (o, k_pages, v_pages) with o: (B, H, hd).
+    """
+    k_pages, v_pages = write_token_to_pages(
+        k_pages, v_pages, block_tables, kv_len, k_new, v_new)
+    o = paged_attention(q, k_pages, v_pages, block_tables, kv_len + 1,
+                        impl=impl)
+    return o, k_pages, v_pages

@@ -29,7 +29,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.blocks import Block, BlockChain
+from repro.core.blocks import Block, BlockChain, chain_signature
 from repro.core.zoo import BlockZoo
 from repro.serving.api import ServeRequest, ServeResult, Server
 from repro.serving.cost_model import preempt_readmit_strategy
@@ -41,7 +41,7 @@ from repro.serving.scheduler import SchedEntry, Scheduler
 @dataclass
 class GenerationResult:
     tokens: np.ndarray  # (B, gen_len)
-    probs_last: np.ndarray  # (B, V) final-step probabilities
+    probs_last: Optional[np.ndarray]  # (B, V) final-step probs; None if gen_len=0
     adaptive_blocks_used: int = 0
 
 
@@ -55,6 +55,8 @@ class EngineConfig:
     policy: str = "fcfs"        # admission order: fcfs | priority
     preemption: bool = True     # pressure-driven slot eviction (priority)
     preempt_strategy: str = "auto"  # auto | spill | recalc (§5.1)
+    fused: bool = True          # fused chain-step megastep + batched prefill
+    #   (False = per-hop dispatch path, kept as the parity oracle)
 
 
 @dataclass
@@ -86,8 +88,8 @@ class BlockEngine(Server):
         self.config = c = config or EngineConfig()
         self._rid = itertools.count()
         self.stats = {"steps": 0, "prefills": 0, "decode_tokens": 0,
-                      "group_calls": 0, "preemptions": 0, "spills": 0,
-                      "recalc_readmits": 0}
+                      "group_calls": 0, "host_syncs": 0, "preemptions": 0,
+                      "spills": 0, "recalc_readmits": 0}
         self.scheduler = Scheduler(policy=c.policy)
         self.executor = BlockExecutor(attn_impl=c.attn_impl, stats=self.stats)
         pages_per_seq = -(-max_len // c.page_size)
@@ -97,6 +99,7 @@ class BlockEngine(Server):
         self.active: List[_ReqState] = []
         self._entries: Dict[int, SchedEntry] = {}  # rid -> running lifecycle
         self._early: List[ServeResult] = []        # gen_len=0 completions
+        self._pending_prefill: List[_ReqState] = []  # admitted, not prefilled
 
     @property
     def pools(self):
@@ -189,6 +192,12 @@ class BlockEngine(Server):
             running=lambda: [self._entries[s.rid] for s in self.active],
             preempt=(self._preempt_entry if self.config.preemption else None),
             on_admit=self._place)
+        if self._pending_prefill:
+            # batched multi-request prefill: slots were allocated per entry
+            # during admission (so fits saw true occupancy); the compute
+            # runs as one padded jitted call per (chain, length bucket)
+            self.executor.prefill_batched(self._pending_prefill, self.kv)
+            self._pending_prefill = []
         if self.scheduler.waiting and not self.active and not admitted:
             head = self.scheduler.peek()
             raise MemoryError(
@@ -209,7 +218,18 @@ class BlockEngine(Server):
                           prompt_tokens=np.asarray(req.prompt_tokens),
                           adaptive_blocks_used=used_adaptive,
                           t_submit=t_submit)
-        self.executor.prefill(state, req.prompt_tokens, self.kv)
+        if self.config.fused:
+            # reserve whole-lifetime slots now — the admission loop's next
+            # fits() must see them — and defer the compute so co-admitted
+            # requests prefill as one batched call per (chain, bucket)
+            for i, (block, _) in enumerate(steps):
+                if block.has_kv:
+                    _, pool = self.kv.pool_for(block)
+                    pool.alloc(state.rid, i,
+                               state.prompt_len + state.gen_len)
+            self._pending_prefill.append(state)
+        else:
+            self.executor.prefill(state, req.prompt_tokens, self.kv)
         entry.payload = state
         self._entries[entry.rid] = entry
         self.active.append(state)
@@ -243,6 +263,9 @@ class BlockEngine(Server):
         state = next((s for s in self.active if s.rid == rid), None)
         if state is None:
             return False
+        # materialize the victim's group before touching its host state
+        # (tokens/kv_len may be device-resident in a fused DecodeState)
+        self.executor.sync_rid(rid)
         strategy = strategy or self.config.preempt_strategy
         if strategy == "auto":
             prefix_flops = sum(b.flops_per_token()
@@ -287,31 +310,69 @@ class BlockEngine(Server):
     # -- one decode iteration over all in-flight requests -------------------
 
     def _decode_step(self) -> List[ServeResult]:
-        cap = self.config.max_block_batch
-        # emit the token chosen at the previous hop (prefill or last decode),
-        # then split finished from still-running in one pass
-        still_going: List[_ReqState] = []
-        finished: List[_ReqState] = []
+        ex = self.executor
+        # split finished from still-running; a device-resident request has
+        # ex.buffered(rid) emitted tokens not yet reflected in s.tokens
+        continuing: List[_ReqState] = []
+        finishing: List[_ReqState] = []
         for s in self.active:
+            done = len(s.tokens) + ex.buffered(s.rid)
+            (finishing if done + 1 >= s.gen_len else continuing).append(s)
+        # partition the survivors into fused groups by full-chain signature
+        # (§5.2 batch cap applied chain-wide); chains the fused megastep
+        # cannot compile fall back to the per-hop dispatch path
+        fused_groups: List[List[_ReqState]] = []
+        hop_states: List[_ReqState] = []
+        if self.config.fused:
+            for g in self.scheduler.form_chain_groups(
+                    continuing, key_fn=lambda s: chain_signature(s.steps),
+                    max_batch=self.config.max_block_batch):
+                try:
+                    ex.fused_fn(g[0].steps, chain_signature(g[0].steps))
+                    fused_groups.append(g)
+                except NotImplementedError:
+                    hop_states.extend(g)
+        else:
+            hop_states = continuing
+        # groups that changed membership (finish/admission) sync to host
+        # here; identical groups keep their device-resident DecodeState
+        ex.retire_states(keep=frozenset(
+            tuple(s.rid for s in g) for g in fused_groups))
+        # emit the token chosen at the previous step (prefill or decode)
+        results = []
+        for s in finishing:
             s.tokens.append(s.next_token)
-            (still_going if len(s.tokens) < s.gen_len else finished).append(s)
-        results = [self._finish(s) for s in finished]
-        if finished:
-            self.executor.invalidate_tables()
-        self.active = still_going
-        if not still_going:
+            results.append(self._finish(s))
+        if finishing:
+            ex.invalidate_tables()
+        self.active = continuing
+        if not continuing:
             return results
-        # run every remaining request one full token through its chain,
-        # hop-by-hop; at each hop the scheduler's per-(block, adapters) run
-        # queues merge requests sitting on the same block into batched
-        # calls, capped at max_block_batch (paper §5.2)
-        xs = self.executor.seed_tokens(still_going)
-        cursors = {s.rid: 0 for s in still_going}
-        by_rid = {s.rid: s for s in still_going}
+        # one fused jitted call per group runs the whole chain for one
+        # token, sampling on device — no per-hop Python loop, no host sync
+        for g in fused_groups:
+            ex.fused_step(g, self.kv)
+        if hop_states:
+            # per-hop states emit host-side: the pending token lands in
+            # s.tokens now and also seeds this step's chain walk
+            for s in hop_states:
+                s.tokens.append(s.next_token)
+            self._run_hops(hop_states)
+        return results
+
+    def _run_hops(self, states: List[_ReqState]) -> None:
+        """Per-hop fallback (parity oracle): walk the chains hop-by-hop in
+        lockstep; at each hop the scheduler's per-(block, adapters) run
+        queues merge requests sitting on the same block into batched calls,
+        capped at max_block_batch (paper §5.2), then sample on host."""
+        cap = self.config.max_block_batch
+        xs = self.executor.seed_tokens(states)
+        cursors = {s.rid: 0 for s in states}
+        by_rid = {s.rid: s for s in states}
         hop = 0
         while True:
             keys: List[Tuple] = []
-            for s in still_going:
+            for s in states:
                 if hop >= len(s.steps):
                     continue
                 block, adapters = s.steps[hop]
@@ -331,8 +392,7 @@ class BlockEngine(Server):
             for rid in cursors:
                 cursors[rid] = hop
         # chain finished: lm_head output -> next token
-        self.executor.sample_step(still_going, xs)
-        return results
+        self.executor.sample_step(states, xs)
 
     def _finish(self, s: _ReqState) -> ServeResult:
         self.kv.free_request(s.rid)
@@ -367,7 +427,11 @@ class BlockEngine(Server):
             rids.append(self._submit_chain(req, chain))
         results = {r.rid: r for r in self.drain() if r.rid in set(rids)}
         tokens = np.stack([results[r].tokens for r in rids], axis=0)
-        probs = np.stack([results[r].probs_last for r in rids], axis=0)
+        # gen_len=0 completes at admission with no sampled distribution;
+        # tokens is a clean (B, 0) and probs_last stays None
+        probs_list = [results[r].probs_last for r in rids]
+        probs = (np.stack(probs_list, axis=0)
+                 if all(p is not None for p in probs_list) else None)
         used = results[rids[0]].info["adaptive_blocks_used"]
         return GenerationResult(tokens=tokens, probs_last=probs,
                                 adaptive_blocks_used=used)

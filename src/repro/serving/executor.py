@@ -1,16 +1,22 @@
 """Numerics layer of the serving stack (DESIGN.md §2).
 
 ``BlockExecutor`` owns everything that touches device compute for the
-real-execution plane: the jitted per-(block, adapters) function caches
-(decode and prefill), batched group execution over the shared paged KV
-pools (cross-app batching on shared foundation blocks, paper §5.2), block
-table staging, and sampling.  It holds no request lifecycle: the shared
+real-execution plane: the fused per-chain-signature megastep (one jitted
+call per group per token: embedding -> every attention/MLP/adapter hop
+with paged-KV decode and in-computation K/V scatter -> lm_head ->
+on-device greedy argmax/softmax), device-resident ``DecodeState`` kept
+across steps, batched multi-request prefill, and — as the parity oracle
+and heterogeneous-tail fallback — the jitted per-(block, adapters)
+function caches with per-hop group batching (cross-app batching on shared
+foundation blocks, paper §5.2).  It holds no request lifecycle: the shared
 ``Scheduler`` decides *what* runs and the ``KVManager`` decides *where*
 KV lives; the executor decides *how* it runs.
 """
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -22,29 +28,77 @@ from repro.core.blocks import (
     apply_block,
     block_decode_paged,
     block_prefill_raw,
+    chain_decode_fused,
+    chain_prefill_fused,
+    chain_signature,
 )
 from repro.serving.kv_pool import KVManager
 
 
+def _bucket(n: int, lo: int = 8) -> int:
+    """Pad-to-bucket prompt length: next power of two, floor ``lo`` — bounds
+    the number of prefill shapes XLA ever compiles per chain."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclass
+class DecodeState:
+    """Device-resident decode state for one fused group (DESIGN.md §2).
+
+    While a group's membership is stable, its pending next-token ids,
+    kv lengths and emitted-token backlog live on device; nothing syncs to
+    host until a member finishes, is preempted, or the group re-forms.
+    ``states`` are the engine's per-request records (duck-typed: ``rid``,
+    ``tokens``, ``next_token``, ``probs_last``, ``kv_len``).
+    """
+    rids: Tuple[int, ...]
+    sig: Tuple
+    states: List            # engine request states, group order
+    next_token: jnp.ndarray  # (B,) pending sampled token, not yet emitted
+    kv_len: jnp.ndarray      # (B,) tokens cached, tracked on device
+    tables: Tuple[jnp.ndarray, ...]  # staged (B, n) page table per attn hop
+    kv_len0: List[int]       # host kv_len at creation (host mirror base)
+    emitted: List[jnp.ndarray] = field(default_factory=list)  # (B,) per step
+    probs: Optional[jnp.ndarray] = None  # (B, V) probs of latest next_token
+
+    @property
+    def steps_taken(self) -> int:
+        return len(self.emitted)
+
+
 class BlockExecutor:
-    """Jitted per-block execution, group batching and sampling."""
+    """Fused chain execution, per-hop fallback, batching and sampling."""
 
     def __init__(self, attn_impl: str = "auto",
                  stats: Optional[dict] = None):
         self.attn_impl = attn_impl
         self.stats = stats if stats is not None else {
-            "prefills": 0, "decode_tokens": 0, "group_calls": 0}
+            "prefills": 0, "decode_tokens": 0, "group_calls": 0,
+            "host_syncs": 0}
+        self.stats.setdefault("host_syncs", 0)
         self._block_fns: Dict[Tuple, object] = {}
         self._prefill_fns: Dict[Tuple, object] = {}
-        # slots are fixed while a request stays resident, so a group's block
-        # table is constant between membership changes: cache per
-        # (rids, hop); the engine invalidates on finish/preempt/restore
-        self._table_cache: Dict[Tuple, jnp.ndarray] = {}
+        # fused megastep + batched prefill, one jitted callable per chain
+        # signature (prefill retraces per (B, bucket) shape)
+        self._fused_fns: Dict[Tuple, Tuple[object, Tuple]] = {}
+        self._chain_prefill_fns: Dict[Tuple, object] = {}
+        # device-resident decode state per fused group, keyed by rid tuple
+        self.decode_states: Dict[Tuple[int, ...], DecodeState] = {}
+        self._rid_group: Dict[int, Tuple[int, ...]] = {}
+        # per-hop path: slots are fixed while a request stays resident, so a
+        # group's block table is constant between membership changes: LRU
+        # cache per (rids, hop); the engine invalidates on
+        # finish/preempt/restore and the cap bounds membership churn
+        self.table_cache_max = 128
+        self._table_cache: OrderedDict[Tuple, jnp.ndarray] = OrderedDict()
 
     def invalidate_tables(self) -> None:
         self._table_cache.clear()
 
-    # -- jitted per-block executors -----------------------------------------
+    # -- jitted per-block executors (per-hop fallback / parity oracle) -------
 
     def block_fn(self, block: Block, adapters: Tuple[Block, ...]):
         key = (block.id, tuple(a.id for a in adapters))
@@ -100,7 +154,8 @@ class BlockExecutor:
             x, k_r, v = self.prefill_fn(block, adapters)(x)
             if k_r is not None:
                 _, pool = kv.pool_for(block)
-                pool.alloc(state.rid, i, state.prompt_len + state.gen_len)
+                if (state.rid, i) not in pool.slots:
+                    pool.alloc(state.rid, i, state.prompt_len + state.gen_len)
                 pool.write_prefill(state.rid, i, k_r, v)
         state.kv_len = len(tokens)
         if sample:
@@ -108,14 +163,192 @@ class BlockExecutor:
             state.next_token = int(jnp.argmax(logits))
             state.probs_last = np.asarray(
                 jax.nn.softmax(logits.astype(jnp.float32)))
+            self.stats["host_syncs"] += 1
         self.stats["prefills"] += 1
 
-    # -- decode: batched group execution ------------------------------------
+    def prefill_batched(self, states: List, kv: KVManager) -> None:
+        """Batched multi-request prefill: pad each request's prompt to a
+        power-of-two bucket and run one jitted chain call per
+        (chain signature, bucket) instead of one per-block call per request.
+        KV slots must already be allocated (admission does that so the
+        scheduler's ``fits`` sees true occupancy)."""
+        groups: Dict[Tuple, List] = {}
+        for s in states:
+            key = (chain_signature(s.steps), _bucket(s.prompt_len))
+            groups.setdefault(key, []).append(s)
+        for (sig, bucket), members in groups.items():
+            self._prefill_group(sig, bucket, members, kv)
+
+    def chain_prefill_fn(self, steps, sig):
+        fn = self._chain_prefill_fns.get(sig)
+        if fn is None:
+
+            @jax.jit
+            def fn(tok, lens):
+                return chain_prefill_fused(steps, tok, lens)
+
+            self._chain_prefill_fns[sig] = fn
+        return fn
+
+    def _prefill_group(self, sig, bucket: int, states: List,
+                       kv: KVManager) -> None:
+        B = len(states)
+        tok = np.zeros((B, bucket), np.int32)
+        for i, s in enumerate(states):
+            tok[i, :s.prompt_len] = s.prompt_tokens
+        lens = jnp.asarray([s.prompt_len for s in states], jnp.int32)
+        fn = self.chain_prefill_fn(states[0].steps, sig)
+        nxt, probs, kvs = fn(jnp.asarray(tok), lens)
+        hop = 0
+        for i, (block, _) in enumerate(states[0].steps):
+            if not block.has_kv:
+                continue
+            _, pool = kv.pool_for(block)
+            k_r, v = kvs[hop]
+            for bi, s in enumerate(states):
+                pool.write_prefill(s.rid, i, k_r[bi:bi + 1, :s.prompt_len],
+                                   v[bi:bi + 1, :s.prompt_len])
+            hop += 1
+        nxt_h, probs_h = jax.device_get((nxt, probs))
+        self.stats["host_syncs"] += 1
+        for i, s in enumerate(states):
+            s.kv_len = s.prompt_len
+            s.next_token = int(nxt_h[i])
+            s.probs_last = np.asarray(probs_h[i])
+            self.stats["prefills"] += 1
+
+    # -- fused chain-step decode (device-resident megastep) ------------------
+
+    def fused_fn(self, steps, sig):
+        """One jitted megastep per chain signature; returns (fn, pool_keys)
+        where ``pool_keys`` orders the KV-pool signatures the chain needs."""
+        cached = self._fused_fns.get(sig)
+        if cached is not None:
+            return cached
+        impl = self.attn_impl
+        pool_keys: List[Tuple] = []
+        pool_index: List[int] = []
+        for block, _ in steps:
+            if block.has_kv:
+                if block.cfg.sliding_window:
+                    raise NotImplementedError(
+                        "paged decode does not support sliding-window blocks")
+                key = block.kv_signature
+                if key not in pool_keys:
+                    pool_keys.append(key)
+                pool_index.append(pool_keys.index(key))
+
+        @functools.partial(jax.jit, donate_argnums=(1, 2))
+        def fn(tok, pools_k, pools_v, tables, kv_len):
+            return chain_decode_fused(steps, pool_index, tok, pools_k,
+                                      pools_v, tables, kv_len,
+                                      attn_impl=impl)
+
+        out = (fn, tuple(pool_keys))
+        self._fused_fns[sig] = out
+        return out
+
+    def buffered(self, rid: int) -> int:
+        """Decode steps a request has taken since its host state was last
+        synced (0 when it is not device-resident)."""
+        key = self._rid_group.get(rid)
+        if key is None:
+            return 0
+        return self.decode_states[key].steps_taken
+
+    def retire_states(self, keep: frozenset = frozenset()) -> None:
+        """Sync-and-drop every DecodeState whose rid tuple is not in
+        ``keep`` — called when group membership changes (finish, preempt,
+        admission) so host state is fresh before the engine touches it."""
+        for rids in [k for k in self.decode_states if k not in keep]:
+            self._sync_state(self.decode_states.pop(rids))
+            for r in rids:
+                self._rid_group.pop(r, None)
+
+    def sync_rid(self, rid: int) -> None:
+        """Materialize the group containing ``rid`` (no-op when absent)."""
+        key = self._rid_group.get(rid)
+        if key is not None:
+            self.retire_states(keep=frozenset(
+                k for k in self.decode_states if k != key))
+
+    def _sync_state(self, ds: DecodeState) -> None:
+        if not ds.emitted:
+            return  # never stepped: host state is still authoritative
+        emitted, nxt, probs = jax.device_get(
+            (jnp.stack(ds.emitted), ds.next_token, ds.probs))
+        self.stats["host_syncs"] += 1
+        n = ds.steps_taken
+        for i, s in enumerate(ds.states):
+            s.tokens.extend(int(t) for t in emitted[:, i])
+            s.next_token = int(nxt[i])
+            s.probs_last = probs[i]
+            s.kv_len = ds.kv_len0[i] + n
+
+    def _make_state(self, states: List, kv: KVManager) -> DecodeState:
+        steps = states[0].steps
+        sig = chain_signature(steps)
+        rids = tuple(s.rid for s in states)
+        tables = []
+        for i, (block, _) in enumerate(steps):
+            if block.has_kv:
+                _, pool = kv.pool_for(block)
+                tables.append(jnp.asarray(
+                    pool.block_table([(s.rid, i) for s in states])))
+        ds = DecodeState(
+            rids=rids, sig=sig, states=list(states),
+            next_token=jnp.asarray([s.next_token for s in states], jnp.int32),
+            kv_len=jnp.asarray([s.kv_len for s in states], jnp.int32),
+            tables=tuple(tables),
+            kv_len0=[s.kv_len for s in states])
+        self.decode_states[rids] = ds
+        for r in rids:
+            self._rid_group[r] = rids
+        return ds
+
+    def fused_step(self, states: List, kv: KVManager) -> None:
+        """One token for one fused group: a single jitted call covering the
+        whole chain, with sampling on device.  The pending token and kv
+        lengths stay device-resident between calls."""
+        rids = tuple(s.rid for s in states)
+        ds = self.decode_states.get(rids)
+        if ds is None:
+            ds = self._make_state(states, kv)
+        fn, pool_keys = self.fused_fn(states[0].steps, ds.sig)
+        pools = [kv.pools[k] for k in pool_keys]
+        pk = tuple(p.k_pages for p in pools)
+        pv = tuple(p.v_pages for p in pools)
+        self.stats["group_calls"] += 1
+        nxt, probs, pk, pv, kv_len = fn(ds.next_token, pk, pv, ds.tables,
+                                        ds.kv_len)
+        for p, k_new, v_new in zip(pools, pk, pv):
+            p.k_pages, p.v_pages = k_new, v_new
+        ds.emitted.append(ds.next_token)
+        ds.next_token = nxt
+        ds.probs = probs
+        ds.kv_len = kv_len
+        self.stats["decode_tokens"] += len(states)
+
+    # -- decode: per-hop batched group execution (fallback path) -------------
 
     def seed_tokens(self, states) -> Dict[int, jnp.ndarray]:
         """Per-request (1, 1) input carrying the pending sampled token."""
         return {s.rid: jnp.asarray([[s.next_token]], jnp.int32)
                 for s in states}
+
+    def _tables_for(self, rids: List[int], cursor: int, pool,
+                    cursors) -> jnp.ndarray:
+        key = (tuple(rids), cursor)
+        tables = self._table_cache.get(key)
+        if tables is not None:
+            self._table_cache.move_to_end(key)
+            return tables
+        tables = jnp.asarray(pool.block_table(
+            [(r, cursors[r]) for r in rids]))
+        self._table_cache[key] = tables
+        while len(self._table_cache) > self.table_cache_max:
+            self._table_cache.popitem(last=False)
+        return tables
 
     def run_group(self, rids: List[int], by_rid, cursors, xs,
                   kv: KVManager) -> None:
@@ -128,12 +361,7 @@ class BlockExecutor:
         self.stats["group_calls"] += 1
         if block.has_kv:
             _, pool = kv.pool_for(block)
-            tkey = (tuple(rids), cursor)
-            tables = self._table_cache.get(tkey)
-            if tables is None:
-                tables = jnp.asarray(pool.block_table(
-                    [(r, cursors[r]) for r in rids]))
-                self._table_cache[tkey] = tables
+            tables = self._tables_for(rids, cursor, pool, cursors)
             kv_len = jnp.asarray([by_rid[r].kv_len for r in rids], jnp.int32)
             out, pool.k_pages, pool.v_pages = fn(
                 x, pool.k_pages, pool.v_pages, tables, kv_len)
@@ -142,7 +370,7 @@ class BlockExecutor:
         for i, r in enumerate(rids):
             xs[r] = out[i:i + 1]
 
-    # -- sampling ------------------------------------------------------------
+    # -- sampling (fallback path; the fused megastep samples on device) ------
 
     def sample_step(self, states, xs) -> None:
         """Greedy next-token selection over the lm_head outputs — one
@@ -155,11 +383,13 @@ class BlockExecutor:
         for group in by_vocab.values():
             logits = jnp.concatenate([xs[s.rid] for s in group], axis=0)[:, 0]
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            self.stats["host_syncs"] += 1
             last = [i for i, s in enumerate(group)
                     if len(s.tokens) + 1 >= s.gen_len]
             if last:
                 probs = np.asarray(jax.nn.softmax(
                     logits[jnp.asarray(last)].astype(jnp.float32), axis=-1))
+                self.stats["host_syncs"] += 1
                 for j, i in enumerate(last):
                     group[i].probs_last = probs[j]
             for i, s in enumerate(group):

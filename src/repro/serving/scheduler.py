@@ -175,3 +175,25 @@ class Scheduler:
     def drop_queue(self, key: Any) -> None:
         """Discard a block queue (the simulator evicted its instance)."""
         self._queues.pop(key, None)
+
+    # -- full-chain signature groups (fused megastep, DESIGN.md §2) ----------
+
+    def form_chain_groups(self, items: Iterable[Any],
+                          key_fn: Callable[[Any], Any],
+                          max_batch: int) -> List[List[Any]]:
+        """Partition ``items`` into fused-execution groups: one group per
+        full-chain signature (``key_fn``), split into chunks of at most
+        ``max_batch`` (the §5.2 per-block batch cap applied chain-wide).
+
+        Order is deterministic — groups appear in first-seen signature
+        order and members keep their relative order — so a stable running
+        set re-forms identical groups step after step, letting the
+        executor keep their decode state device-resident."""
+        by_key: Dict[Any, List[Any]] = {}
+        for item in items:
+            by_key.setdefault(key_fn(item), []).append(item)
+        groups: List[List[Any]] = []
+        for members in by_key.values():
+            for i in range(0, len(members), max_batch):
+                groups.append(members[i:i + max_batch])
+        return groups
