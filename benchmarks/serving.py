@@ -50,6 +50,19 @@ def latency_percentiles(results) -> dict:
             "latency_p95_s": round(float(np.percentile(lats, 95)), 4)}
 
 
+def request_time_percentiles(results) -> dict:
+    """TTFT and queue-wait p50/p95 from the per-request timestamps the
+    engine's tracer threads through ``ServeResult.info`` (DESIGN.md §8)."""
+    out = {}
+    for field, key in (("ttft_s", "ttft"), ("queue_wait_s", "queue_wait")):
+        vals = [r.info[field] for r in results
+                if r.info and field in r.info]
+        for q in (50, 95):
+            v = float(np.percentile(vals, q)) if vals else 0.0
+            out[f"{key}_p{q}_s"] = round(v, 4)
+    return out
+
+
 def bench_batched(cfg, zoo, engine, args, seed):
     """Submit all requests, then drive ``engine.step()`` by hand, timing
     every step and recording its ``group_calls`` delta — the dispatch
@@ -57,6 +70,8 @@ def bench_batched(cfg, zoo, engine, args, seed):
     group instead of one per hop)."""
     reqs = make_requests(cfg, zoo, args, seed)
     stats0 = dict(engine.stats)
+    h_batch = engine.metrics.histogram("group_batch")
+    hb_count0, hb_sum0 = h_batch.count, h_batch.total
     step_walls: list = []
     results = []
     t0 = time.perf_counter()
@@ -86,6 +101,12 @@ def bench_batched(cfg, zoo, engine, args, seed):
         "host_syncs": delta.get("host_syncs", 0),
         "engine_steps": delta.get("steps", 0),
     }
+    # per-block batch occupancy: mean lanes per group call vs the §5.2 cap
+    hb_count = h_batch.count - hb_count0
+    bb_mean = (h_batch.total - hb_sum0) / hb_count if hb_count else 0.0
+    max_batch = engine.metrics.gauge("max_block_batch").value or 1
+    dispatch["block_batch_mean"] = round(bb_mean, 2)
+    dispatch["block_util_frac"] = round(bb_mean / max_batch, 3)
     return toks, dt, results, dispatch
 
 
@@ -115,6 +136,10 @@ def run(requests: int = 8, gen_len: int = 32, prompt_len: int = 16):
         ("serving/speedup", report["speedup"], "target>=1.5"),
         ("serving/latency_p50_s", report["latency_p50_s"], "batched"),
         ("serving/latency_p95_s", report["latency_p95_s"], "batched"),
+        ("serving/ttft_p95_s", report["ttft_p95_s"], "batched"),
+        ("serving/queue_wait_p95_s", report["queue_wait_p95_s"], "batched"),
+        ("serving/block_util_frac", report["block_util_frac"],
+         "mean group batch / cap"),
         ("serving/step_wall_p50_s", report["step_wall_p50_s"], "batched"),
         ("serving/group_calls_per_step", report["group_calls_per_step"],
          "fused target<=chains"),
@@ -129,6 +154,8 @@ def _measure(args) -> dict:
     bench_batched(cfg, zoo, engine, args, seed=123)
     warm = argparse.Namespace(**{**vars(args), "requests": 1})
     bench_sequential(cfg, zoo, seq_engine, warm, seed=123)
+    # discard warmup spans so --trace-out holds only the measured trials
+    engine.tracer.clear()
 
     # best-of-N: decode steps are ~10ms, so on a small shared box a single
     # descheduling skews a trial; the fastest trial is the machine's real
@@ -140,8 +167,13 @@ def _measure(args) -> dict:
     s_toks, s_dt, _ = bench_sequential(cfg, zoo, seq_engine, args, seed=0)
     b_tps = b_toks / max(b_dt, 1e-9)
     s_tps = s_toks / max(s_dt, 1e-9)
+    if getattr(args, "trace_out", None):
+        engine.tracer.write_chrome_trace(args.trace_out)
+    if getattr(args, "metrics_out", None):
+        engine.metrics.write(args.metrics_out)
     return {
         **latency_percentiles(b_results),
+        **request_time_percentiles(b_results),
         **dispatch,
         "concurrency": args.requests,
         "gen_len": args.gen_len,
@@ -165,6 +197,11 @@ def main():
     ap.add_argument("--trials", type=int, default=3,
                     help="batched-pass trials; the fastest is reported")
     ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace_event JSON of the measured "
+                         "trials (load in chrome://tracing / Perfetto)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the engine metrics registry snapshot JSON")
     args = ap.parse_args()
     report = _measure(args)
     with open(args.out, "w") as f:

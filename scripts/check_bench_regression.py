@@ -36,6 +36,11 @@ def main() -> int:
     ap.add_argument("--baseline-path", default="BENCH_serving.json")
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="allowed fractional drop below the baseline")
+    ap.add_argument("--max-host-syncs-ratio", type=float, default=None,
+                    help="warn (never fail) when fresh host_syncs exceeds "
+                         "the committed count by more than this factor — "
+                         "an early tripwire for membership-change churn "
+                         "re-entering the decode hot path")
     args = ap.parse_args()
 
     with open(args.fresh) as f:
@@ -50,10 +55,20 @@ def main() -> int:
     got = fresh[KEY]
     print(f"{KEY}: fresh={got:.2f} committed={base[KEY]:.2f} "
           f"floor={floor:.2f} (tolerance {args.tolerance:.0%})")
-    for extra in ("group_calls_per_step", "host_syncs", "step_wall_p50_s"):
+    for extra in ("group_calls_per_step", "host_syncs", "step_wall_p50_s",
+                  "ttft_p50_s", "ttft_p95_s", "queue_wait_p95_s",
+                  "block_batch_mean", "block_util_frac"):
         if extra in fresh:
             print(f"  {extra}: fresh={fresh[extra]} "
                   f"committed={base.get(extra, 'n/a')}")
+    if args.max_host_syncs_ratio is not None:
+        fresh_hs, base_hs = fresh.get("host_syncs"), base.get("host_syncs")
+        if fresh_hs is not None and base_hs:
+            ratio = fresh_hs / base_hs
+            if ratio > args.max_host_syncs_ratio:
+                print(f"WARN: host_syncs ratio {ratio:.2f} exceeds "
+                      f"--max-host-syncs-ratio {args.max_host_syncs_ratio} "
+                      f"(fresh={fresh_hs} committed={base_hs}); not failing")
     if got < floor:
         print(f"FAIL: {KEY} dropped more than {args.tolerance:.0%} below "
               "the committed baseline")

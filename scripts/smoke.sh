@@ -8,5 +8,6 @@ cd "$(dirname "$0")/.."
 
 PYTHONPATH=src python -m pytest -q -m "not slow" "$@"
 status=$?
-PYTHONPATH=src:. python benchmarks/serving.py --out BENCH_serving.json
+PYTHONPATH=src:. python benchmarks/serving.py --out BENCH_serving.json \
+    --trace-out BENCH_serving_trace.json --metrics-out BENCH_serving_metrics.json
 exit "$status"

@@ -42,7 +42,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     import jax
 
     from repro.configs import SHAPES, get_config
-    from repro.launch.hlo_analysis import analyze_hlo_text
+    from repro.launch.hlo_analysis import analyze_hlo_text, cost_analysis_dict
     from repro.launch.mesh import make_production_mesh
     from repro.launch.steps import build_cell
 
@@ -68,7 +68,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         print(mem)  # proves it fits
-        ca = compiled.cost_analysis()
+        ca = cost_analysis_dict(compiled)
         print({k: ca.get(k) for k in ("flops", "bytes accessed")})
     hlo = analyze_hlo_text(compiled.as_text())
 

@@ -57,6 +57,20 @@ _ELEMENTWISE = {
 }
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns one properties dict; newer versions return a list
+    with one dict per executable module (jax-ml/jax#20599 lineage).  This
+    helper always hands back a flat dict (the first module's properties),
+    so callers can keep using ``.get("flops")``-style lookups.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def _type_bytes(type_str: str) -> int:
     """Bytes of a (possibly tuple) HLO type string."""
     total = 0

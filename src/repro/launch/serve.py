@@ -38,6 +38,10 @@ def run_sim(args) -> dict:
     results = server.drain()
     metrics = server.metrics()
     metrics["completed_via_api"] = len(results)
+    if getattr(args, "trace_out", None):
+        server.tracer.write_chrome_trace(args.trace_out)
+    if getattr(args, "metrics_out", None):
+        server.metrics_registry.write(args.metrics_out)
     return metrics
 
 
@@ -69,6 +73,15 @@ def run_real(args) -> dict:
     pct = (lambda q: round(lats[min(len(lats) - 1,
                                     int(q * (len(lats) - 1) + 0.5))], 4)
            ) if lats else (lambda q: 0.0)
+    from repro.observability import percentiles_of
+    ttft = percentiles_of([r.info["ttft_s"] for r in results
+                           if r.info and "ttft_s" in r.info])
+    qwait = percentiles_of([r.info["queue_wait_s"] for r in results
+                            if r.info and "queue_wait_s" in r.info])
+    if getattr(args, "trace_out", None):
+        engine.write_trace(args.trace_out)
+    if getattr(args, "metrics_out", None):
+        engine.write_metrics(args.metrics_out)
     return {
         "completed": len(results),
         "generated_tokens": gen_tokens,
@@ -76,6 +89,10 @@ def run_real(args) -> dict:
         "tokens_per_s": round(gen_tokens / max(dt, 1e-9), 2),
         "latency_p50_s": pct(0.50),
         "latency_p95_s": pct(0.95),
+        "ttft_p50_s": round(ttft[50], 4),
+        "ttft_p95_s": round(ttft[95], 4),
+        "queue_wait_p50_s": round(qwait[50], 4),
+        "queue_wait_p95_s": round(qwait[95], 4),
         "engine_stats": dict(engine.stats),
         "sample": results[0].tokens[:8].tolist() if results else [],
     }
@@ -90,6 +107,11 @@ def main():
     ap.add_argument("--duration", type=float, default=600.0)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=64)
+    # observability artifacts (DESIGN.md §8), both backends
+    ap.add_argument("--trace-out", default=None,
+                    help="write Chrome trace_event JSON of the run")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics registry snapshot JSON")
     # scheduler knobs: generated from the dataclass, shared with the sim
     from repro.serving.simulator import SchedulerConfig
 

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core.blocks import Block, BlockChain, chain_signature
 from repro.core.zoo import BlockZoo
+from repro.observability import MetricsRegistry, Tracer
 from repro.serving.api import ServeRequest, ServeResult, Server
 from repro.serving.cost_model import preempt_readmit_strategy
 from repro.serving.executor import BlockExecutor
@@ -73,6 +74,7 @@ class _ReqState:
     next_token: Optional[int] = None
     probs_last: Optional[np.ndarray] = None
     t_submit: float = 0.0       # wall-clock submission time
+    t_first_token: Optional[float] = None  # prefill completion (TTFT anchor)
     preemptions: int = 0
 
 
@@ -87,15 +89,28 @@ class BlockEngine(Server):
         self.max_len = max_len
         self.config = c = config or EngineConfig()
         self._rid = itertools.count()
-        self.stats = {"steps": 0, "prefills": 0, "decode_tokens": 0,
-                      "group_calls": 0, "host_syncs": 0, "preemptions": 0,
-                      "spills": 0, "recalc_readmits": 0}
-        self.scheduler = Scheduler(policy=c.policy)
-        self.executor = BlockExecutor(attn_impl=c.attn_impl, stats=self.stats)
+        # observability plane (DESIGN.md §8): one tracer + one metrics
+        # registry threaded through scheduler, executor and KV manager
+        self.tracer = Tracer(clock=time.perf_counter)
+        self.metrics = MetricsRegistry()
+        for name in ("steps", "prefills", "decode_tokens", "group_calls",
+                     "host_syncs", "preemptions", "spills",
+                     "recalc_readmits", "completed", "tokens_emitted"):
+            self.metrics.counter(name)  # pre-register: snapshots start at 0
+        self.metrics.set_gauge("max_block_batch", c.max_block_batch)
+        # legacy dict-shaped view: engine.stats[k] reads the counter values
+        self.stats = self.metrics.counters_view()
+        self._c_steps = self.metrics.counter("steps")
+        self._h_step_wall = self.metrics.histogram("step_wall_s")
+        self.scheduler = Scheduler(policy=c.policy, tracer=self.tracer,
+                                   metrics=self.metrics)
+        self.executor = BlockExecutor(attn_impl=c.attn_impl,
+                                      metrics=self.metrics)
         pages_per_seq = -(-max_len // c.page_size)
         num_pages = c.num_pages or (
             1 + c.max_active * pages_per_seq * self._max_attn_steps())
-        self.kv = KVManager(c.page_size, num_pages, dtype=COMPUTE_DTYPE)
+        self.kv = KVManager(c.page_size, num_pages, dtype=COMPUTE_DTYPE,
+                            metrics=self.metrics, tracer=self.tracer)
         self.active: List[_ReqState] = []
         self._entries: Dict[int, SchedEntry] = {}  # rid -> running lifecycle
         self._early: List[ServeResult] = []        # gen_len=0 completions
@@ -147,22 +162,33 @@ class BlockEngine(Server):
                 f"request length {req.prompt_len}+{req.gen_len} exceeds "
                 f"engine max_len={self.max_len}")
         steps, used_adaptive = self._steps(chain, req.block_override)
-        self.scheduler.submit(SchedEntry(
+        entry = self.scheduler.submit(SchedEntry(
             rid=req.rid, app=req.app, arrival=req.arrival,
             priority=req.priority, prompt_len=req.prompt_len,
-            gen_len=req.gen_len,
-            payload=(req, steps, used_adaptive, time.perf_counter())))
+            gen_len=req.gen_len))
+        # the scheduler stamped the "submit" trace event; reuse its clock
+        # reading so info timestamps and the trace timeline agree exactly
+        t_submit = self.tracer.trace(req.rid).last_t("submit")
+        entry.payload = (req, steps, used_adaptive, t_submit)
         return req.rid
 
     def step(self) -> Optional[List[ServeResult]]:
+        t0 = time.perf_counter()
         self._admit()
         early, self._early = self._early, []
         if not self.active:
             if early:
                 return early
             return None if not self.scheduler.waiting else []
-        self.stats["steps"] += 1
-        return early + self._decode_step()
+        self._c_steps.inc()
+        out = early + self._decode_step()
+        self.metrics.set_gauge("active", len(self.active))
+        t1 = time.perf_counter()
+        self._h_step_wall.observe(t1 - t0)
+        self.tracer.global_span("engine_step", t0, t1,
+                                active=len(self.active),
+                                finished=len(out))
+        return out
 
     def drain(self) -> List[ServeResult]:
         out: List[ServeResult] = []
@@ -171,6 +197,16 @@ class BlockEngine(Server):
             if res is None:
                 return out
             out.extend(res)
+
+    # -- observability exports (DESIGN.md §8) --------------------------------
+
+    def write_trace(self, path: str) -> None:
+        """Chrome ``trace_event`` JSON of every traced request + the
+        engine step track; loads in chrome://tracing / Perfetto."""
+        self.tracer.write_chrome_trace(path)
+
+    def write_metrics(self, path: str) -> None:
+        self.metrics.write(path)
 
     # -- admission: scheduler decides, executor prefills ---------------------
 
@@ -197,11 +233,22 @@ class BlockEngine(Server):
             # during admission (so fits saw true occupancy); the compute
             # runs as one padded jitted call per (chain, length bucket)
             self.executor.prefill_batched(self._pending_prefill, self.kv)
+            t = time.perf_counter()
+            for s in self._pending_prefill:
+                self._mark_prefilled(s, t)
             self._pending_prefill = []
         if self.scheduler.waiting and not self.active and not admitted:
             head = self.scheduler.peek()
             raise MemoryError(
                 f"request rid={head.rid} can never fit in the KV pool")
+
+    def _mark_prefilled(self, s: _ReqState, t: float) -> None:
+        """Prefill completed: the first token exists now.  Records the
+        ``prefill`` span boundary and the TTFT sample (satellite: TTFT was
+        previously unobservable — latency folded queueing into decode)."""
+        s.t_first_token = t
+        self.tracer.event(s.rid, "prefill", t=t, prompt_len=s.prompt_len)
+        self.metrics.observe("ttft_s", t - s.t_submit)
 
     def _place(self, entry: SchedEntry):
         if entry.preempted:
@@ -230,6 +277,7 @@ class BlockEngine(Server):
             self._pending_prefill.append(state)
         else:
             self.executor.prefill(state, req.prompt_tokens, self.kv)
+            self._mark_prefilled(state, time.perf_counter())
         entry.payload = state
         self._entries[entry.rid] = entry
         self.active.append(state)
@@ -238,7 +286,11 @@ class BlockEngine(Server):
         """gen_len=0: nothing to decode — finish at admission with empty
         output instead of entering the batch and emitting a spurious token."""
         _, _, used_adaptive, t_submit = entry.payload
-        t_finish = time.perf_counter()
+        t_finish = self.tracer.event(entry.rid, "finish")
+        tr = self.tracer.trace(entry.rid)
+        t_admit = tr.last_t("admit")
+        self.metrics.inc("completed")
+        self.metrics.observe("latency_s", t_finish - t_submit)
         self._early.append(ServeResult(
             rid=entry.rid, app=entry.app,
             tokens=np.zeros(0, np.int32), probs_last=None,
@@ -246,7 +298,11 @@ class BlockEngine(Server):
             info={"adaptive_blocks_used": used_adaptive,
                   "prompt_len": entry.prompt_len,
                   "t_submit": t_submit, "t_finish": t_finish,
-                  "latency_s": t_finish - t_submit, "preemptions": 0}))
+                  "t_admit": t_admit,
+                  "queue_wait_s": (t_admit - t_submit
+                                   if t_admit is not None else 0.0),
+                  "latency_s": t_finish - t_submit, "preemptions": 0,
+                  "trace": tr.to_dict()}))
 
     # -- preemption: pause a resident request under memory pressure ----------
 
@@ -272,9 +328,12 @@ class BlockEngine(Server):
                                for b, _ in state.steps) * max(state.kv_len, 1)
             strategy, _ = preempt_readmit_strategy(self.kv.kv_bytes(rid),
                                                    prefix_flops)
+        self.tracer.event(rid, "preempt", strategy=strategy,
+                          kv_len=state.kv_len,
+                          tokens_done=len(state.tokens))
         if strategy == "spill":
-            snap = self.kv.spill(rid)
-            self.stats["spills"] += 1
+            snap = self.kv.spill(rid)  # KV manager logs the "spill" event
+            self.metrics.inc("spills")
         else:
             self.kv.free_request(rid)
             snap = None
@@ -285,11 +344,13 @@ class BlockEngine(Server):
         entry.preempted = True
         entry.payload = (state, snap)
         self.scheduler.submit(entry)  # keeps its seq: resumes in order
-        self.stats["preemptions"] += 1
+        self.metrics.inc("preemptions")
         return True
 
     def _resume(self, entry: SchedEntry):
         state, snap = entry.payload
+        self.tracer.event(state.rid, "readmit",
+                          mode="spill" if snap is not None else "recalc")
         if snap is not None:
             self.kv.restore(state.rid, snap,
                             state.prompt_len + state.gen_len)
@@ -300,7 +361,8 @@ class BlockEngine(Server):
                 [np.asarray(state.prompt_tokens, np.int32),
                  np.asarray(state.tokens, np.int32)])
             self.executor.prefill(state, prefix, self.kv, sample=False)
-            self.stats["recalc_readmits"] += 1
+            self.tracer.event(state.rid, "recalc", tokens=len(prefix))
+            self.metrics.inc("recalc_readmits")
         entry.preempted = False
         entry.payload = state
         self._entries[state.rid] = entry
@@ -358,6 +420,13 @@ class BlockEngine(Server):
             for s in hop_states:
                 s.tokens.append(s.next_token)
             self._run_hops(hop_states)
+        # one decode_step instant per in-flight request: each engine step
+        # advances every continuing request by exactly one token (fused
+        # groups device-resident, per-hop host-side), so the host-side
+        # dispatch timestamp is the per-step trace marker
+        t = time.perf_counter()
+        for s in continuing:
+            self.tracer.event(s.rid, "decode_step", t=t)
         return results
 
     def _run_hops(self, states: List[_ReqState]) -> None:
@@ -397,7 +466,16 @@ class BlockEngine(Server):
     def _finish(self, s: _ReqState) -> ServeResult:
         self.kv.free_request(s.rid)
         self._entries.pop(s.rid, None)
-        t_finish = time.perf_counter()
+        t_finish = self.tracer.event(s.rid, "finish",
+                                     tokens=len(s.tokens),
+                                     preemptions=s.preemptions)
+        tr = self.tracer.trace(s.rid)
+        t_admit = tr.first_t("admit")
+        ttft = (s.t_first_token - s.t_submit
+                if s.t_first_token is not None else None)
+        self.metrics.inc("completed")
+        self.metrics.inc("tokens_emitted", len(s.tokens))
+        self.metrics.observe("latency_s", t_finish - s.t_submit)
         return ServeResult(
             rid=s.rid, app=s.app,
             tokens=np.asarray(s.tokens, np.int32),
@@ -406,8 +484,14 @@ class BlockEngine(Server):
             info={"adaptive_blocks_used": s.adaptive_blocks_used,
                   "prompt_len": s.prompt_len,
                   "t_submit": s.t_submit, "t_finish": t_finish,
+                  "t_admit": t_admit,
+                  "t_first_token": s.t_first_token,
+                  "ttft_s": ttft,
+                  "queue_wait_s": (t_admit - s.t_submit
+                                   if t_admit is not None else 0.0),
                   "latency_s": t_finish - s.t_submit,
-                  "preemptions": s.preemptions})
+                  "preemptions": s.preemptions,
+                  "trace": tr.to_dict()})
 
     # -- legacy batch API (sequential semantics preserved) -------------------
 

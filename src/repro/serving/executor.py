@@ -32,6 +32,7 @@ from repro.core.blocks import (
     chain_prefill_fused,
     chain_signature,
 )
+from repro.observability.metrics import MetricsRegistry
 from repro.serving.kv_pool import KVManager
 
 
@@ -73,12 +74,18 @@ class BlockExecutor:
     """Fused chain execution, per-hop fallback, batching and sampling."""
 
     def __init__(self, attn_impl: str = "auto",
-                 stats: Optional[dict] = None):
+                 metrics: Optional[MetricsRegistry] = None):
         self.attn_impl = attn_impl
-        self.stats = stats if stats is not None else {
-            "prefills": 0, "decode_tokens": 0, "group_calls": 0,
-            "host_syncs": 0}
-        self.stats.setdefault("host_syncs", 0)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # typed handles held once — the decode hot loop pays one attribute
+        # add per event, not a registry lookup (DESIGN.md §8)
+        self._c_prefills = self.metrics.counter("prefills")
+        self._c_decode_tokens = self.metrics.counter("decode_tokens")
+        self._c_group_calls = self.metrics.counter("group_calls")
+        self._c_host_syncs = self.metrics.counter("host_syncs")
+        # per-block batch occupancy: every batched device call observes its
+        # batch width (compare p50/mean against EngineConfig.max_block_batch)
+        self._h_group_batch = self.metrics.histogram("group_batch")
         self._block_fns: Dict[Tuple, object] = {}
         self._prefill_fns: Dict[Tuple, object] = {}
         # fused megastep + batched prefill, one jitted callable per chain
@@ -163,8 +170,8 @@ class BlockExecutor:
             state.next_token = int(jnp.argmax(logits))
             state.probs_last = np.asarray(
                 jax.nn.softmax(logits.astype(jnp.float32)))
-            self.stats["host_syncs"] += 1
-        self.stats["prefills"] += 1
+            self._c_host_syncs.inc()
+        self._c_prefills.inc()
 
     def prefill_batched(self, states: List, kv: KVManager) -> None:
         """Batched multi-request prefill: pad each request's prompt to a
@@ -210,12 +217,12 @@ class BlockExecutor:
                                    v[bi:bi + 1, :s.prompt_len])
             hop += 1
         nxt_h, probs_h = jax.device_get((nxt, probs))
-        self.stats["host_syncs"] += 1
+        self._c_host_syncs.inc()
         for i, s in enumerate(states):
             s.kv_len = s.prompt_len
             s.next_token = int(nxt_h[i])
             s.probs_last = np.asarray(probs_h[i])
-            self.stats["prefills"] += 1
+            self._c_prefills.inc()
 
     # -- fused chain-step decode (device-resident megastep) ------------------
 
@@ -277,7 +284,7 @@ class BlockExecutor:
             return  # never stepped: host state is still authoritative
         emitted, nxt, probs = jax.device_get(
             (jnp.stack(ds.emitted), ds.next_token, ds.probs))
-        self.stats["host_syncs"] += 1
+        self._c_host_syncs.inc()
         n = ds.steps_taken
         for i, s in enumerate(ds.states):
             s.tokens.extend(int(t) for t in emitted[:, i])
@@ -318,7 +325,8 @@ class BlockExecutor:
         pools = [kv.pools[k] for k in pool_keys]
         pk = tuple(p.k_pages for p in pools)
         pv = tuple(p.v_pages for p in pools)
-        self.stats["group_calls"] += 1
+        self._c_group_calls.inc()
+        self._h_group_batch.observe(len(states))
         nxt, probs, pk, pv, kv_len = fn(ds.next_token, pk, pv, ds.tables,
                                         ds.kv_len)
         for p, k_new, v_new in zip(pools, pk, pv):
@@ -327,7 +335,7 @@ class BlockExecutor:
         ds.next_token = nxt
         ds.probs = probs
         ds.kv_len = kv_len
-        self.stats["decode_tokens"] += len(states)
+        self._c_decode_tokens.inc(len(states))
 
     # -- decode: per-hop batched group execution (fallback path) -------------
 
@@ -358,7 +366,8 @@ class BlockExecutor:
         block, adapters = s0.steps[cursor]
         fn = self.block_fn(block, adapters)
         x = jnp.concatenate([xs[r] for r in rids], axis=0)
-        self.stats["group_calls"] += 1
+        self._c_group_calls.inc()
+        self._h_group_batch.observe(len(rids))
         if block.has_kv:
             _, pool = kv.pool_for(block)
             tables = self._tables_for(rids, cursor, pool, cursors)
@@ -383,16 +392,16 @@ class BlockExecutor:
         for group in by_vocab.values():
             logits = jnp.concatenate([xs[s.rid] for s in group], axis=0)[:, 0]
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
-            self.stats["host_syncs"] += 1
+            self._c_host_syncs.inc()
             last = [i for i, s in enumerate(group)
                     if len(s.tokens) + 1 >= s.gen_len]
             if last:
                 probs = np.asarray(jax.nn.softmax(
                     logits[jnp.asarray(last)].astype(jnp.float32), axis=-1))
-                self.stats["host_syncs"] += 1
+                self._c_host_syncs.inc()
                 for j, i in enumerate(last):
                     group[i].probs_last = probs[j]
             for i, s in enumerate(group):
                 s.next_token = int(nxt[i])
                 s.kv_len += 1
-                self.stats["decode_tokens"] += 1
+                self._c_decode_tokens.inc()

@@ -40,7 +40,8 @@ class KVPool:
     """Paged K/V slab with a free list and per-slot bookkeeping."""
 
     def __init__(self, num_pages: int, page_size: int, kv_heads: int,
-                 head_dim: int, dtype=jnp.bfloat16):
+                 head_dim: int, dtype=jnp.bfloat16, metrics=None,
+                 name: str = ""):
         assert num_pages >= 2, "pool needs at least the trash page + one slot"
         self.page_size = page_size
         self.num_pages = num_pages
@@ -54,6 +55,18 @@ class KVPool:
         self.slots: Dict[Tuple[int, int], KVSlot] = {}  # (rid, step) -> slot
         self.alloc_count = 0
         self.free_count = 0
+        # observability (DESIGN.md §8): used/free pages as gauges, tagged
+        # by pool signature so per-signature pressure is visible
+        self.metrics = metrics
+        self.name = name or f"{kv_heads}x{head_dim}"
+        self._update_gauges()
+
+    def _update_gauges(self):
+        if self.metrics is not None:
+            self.metrics.set_gauge(f"kv_used_pages[{self.name}]",
+                                   self.used_pages)
+            self.metrics.set_gauge(f"kv_free_pages[{self.name}]",
+                                   len(self._free))
 
     # -- accounting ---------------------------------------------------------
 
@@ -90,12 +103,14 @@ class KVPool:
         slot = KVSlot(pages=pages, max_len=n * self.page_size)
         self.slots[(rid, step)] = slot
         self.alloc_count += n
+        self._update_gauges()
         return slot
 
     def free(self, rid: int, step: int):
         slot = self.slots.pop((rid, step))
         self._free.extend(slot.pages)
         self.free_count += len(slot.pages)
+        self._update_gauges()
 
     def free_request(self, rid: int):
         for key in [k for k in self.slots if k[0] == rid]:
@@ -157,10 +172,13 @@ class KVManager:
     pressure instead of blocking the queue (lifting the
     "all slots allocated at admission forever" restriction)."""
 
-    def __init__(self, page_size: int, num_pages: int, dtype=jnp.bfloat16):
+    def __init__(self, page_size: int, num_pages: int, dtype=jnp.bfloat16,
+                 metrics=None, tracer=None):
         self.page_size = page_size
         self.num_pages = num_pages
         self.dtype = dtype
+        self.metrics = metrics  # shared registry: per-pool page gauges
+        self.tracer = tracer    # spill/restore lifecycle events (§8)
         self.pools: Dict[Tuple[int, int], KVPool] = {}
 
     def pool_for(self, block) -> Tuple[Tuple[int, int], KVPool]:
@@ -170,7 +188,8 @@ class KVManager:
         pool = self.pools.get(key)
         if pool is None:
             pool = self.pools[key] = KVPool(self.num_pages, self.page_size,
-                                            key[0], key[1], dtype=self.dtype)
+                                            key[0], key[1], dtype=self.dtype,
+                                            metrics=self.metrics)
         return key, pool
 
     # -- admission planning --------------------------------------------------
@@ -219,6 +238,9 @@ class KVManager:
                                            np.asarray(pool.v_pages[idx]))
                 snap.kv_bytes += len(slot.pages) * pool.page_bytes
                 pool.free(r, step)
+        if self.tracer is not None:
+            self.tracer.event(rid, "spill", kv_bytes=snap.kv_bytes,
+                              slots=len(snap.pages))
         return snap
 
     def restore(self, rid: int, snap: KVSnapshot, tokens: int) -> None:
@@ -234,3 +256,6 @@ class KVManager:
                 jnp.asarray(k_np, pool.k_pages.dtype))
             pool.v_pages = pool.v_pages.at[idx].set(
                 jnp.asarray(v_np, pool.v_pages.dtype))
+        if self.tracer is not None:
+            self.tracer.event(rid, "restore", kv_bytes=snap.kv_bytes,
+                              slots=len(snap.pages))

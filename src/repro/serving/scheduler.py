@@ -58,16 +58,26 @@ class SchedEntry:
 
 
 class Scheduler:
-    """Policy-parameterized request scheduler shared by both planes."""
+    """Policy-parameterized request scheduler shared by both planes.
 
-    def __init__(self, policy: str = "fcfs"):
+    ``tracer``/``metrics`` (both optional) are the observability hooks
+    (DESIGN.md §8): the scheduler is the single source of the ``submit``
+    and ``admit`` lifecycle events and of the queue-side metrics
+    (``queue_wait_s`` histogram, ``waiting_depth`` gauge, per-policy
+    ``admitted`` counter), for both the real engine and the simulator.
+    """
+
+    def __init__(self, policy: str = "fcfs", *, tracer=None, metrics=None):
         if policy not in POLICIES:
             raise ValueError(
                 f"unknown scheduling policy {policy!r}; one of {POLICIES}")
         self.policy = policy
+        self.tracer = tracer
+        self.metrics = metrics
         self._seq = itertools.count()
         self._waiting: List[Tuple[tuple, SchedEntry]] = []  # heap
         self._queues: Dict[Any, List[Tuple[float, int, Any]]] = {}
+        self._enqueued_at: Dict[int, float] = {}  # rid -> tracer-clock submit t
 
     # -- policy ordering ----------------------------------------------------
 
@@ -86,6 +96,18 @@ class Scheduler:
         if entry.seq < 0:
             entry.seq = next(self._seq)
         heapq.heappush(self._waiting, (self.order_key(entry), entry))
+        if self.tracer is not None:
+            # a preempted entry re-entering the queue is not a new arrival;
+            # the backend already logged its "preempt" event
+            t = (self.tracer.event(entry.rid, "submit", app=entry.app,
+                                   prompt_len=entry.prompt_len,
+                                   gen_len=entry.gen_len,
+                                   priority=entry.priority)
+                 if not entry.preempted else self.tracer.clock())
+            self._enqueued_at[entry.rid] = t
+        if self.metrics is not None:
+            self.metrics.set_gauge(f"waiting_depth[{self.policy}]",
+                                   len(self._waiting))
         return entry
 
     @property
@@ -121,6 +143,7 @@ class Scheduler:
             if fits(head):
                 heapq.heappop(self._waiting)
                 admitted.append(head)
+                self._record_admit(head)
                 if on_admit is not None:
                     on_admit(head)
                 continue
@@ -131,6 +154,22 @@ class Scheduler:
                     continue  # resources freed; retry the same head
             break
         return admitted
+
+    def _record_admit(self, entry: SchedEntry) -> None:
+        """Observability at the admission boundary: the ``admit`` event
+        (fresh entries only — a preempted entry's boundary is the
+        backend's ``readmit``) and the policy-tagged queue-wait sample."""
+        t_sub = self._enqueued_at.pop(entry.rid, None)
+        t = None
+        if self.tracer is not None:
+            t = (self.tracer.event(entry.rid, "admit", app=entry.app)
+                 if not entry.preempted else self.tracer.clock())
+        if self.metrics is not None:
+            if t is not None and t_sub is not None:
+                self.metrics.observe("queue_wait_s", t - t_sub)
+            self.metrics.inc("admitted")
+            self.metrics.set_gauge(f"waiting_depth[{self.policy}]",
+                                   len(self._waiting))
 
     def pick_victim(self, running: Iterable[SchedEntry],
                     incoming: SchedEntry) -> Optional[SchedEntry]:

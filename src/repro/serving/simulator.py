@@ -22,6 +22,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.observability import MetricsRegistry, Tracer
 from repro.serving.api import ServeRequest, ServeResult, Server
 from repro.serving.cluster import Cluster, paper_cluster
 from repro.serving.cost_model import (
@@ -213,9 +214,15 @@ class Simulation(Server):
         self.sched = sched
         self.cluster = cluster or paper_cluster()
         self.rng = np.random.RandomState(sched.seed)
+        # observability plane shared with the real engine (DESIGN.md §8):
+        # same registry/tracer types, timestamps in MODELED seconds — so
+        # discrete-event and real runs emit structurally comparable reports
+        self.metrics_registry = MetricsRegistry()
+        self.tracer = Tracer(clock=lambda: self.now)
         # the same Scheduler class the real-execution BlockEngine drives:
         # waiting-queue admission + per-instance run queues (keyed by iid)
-        self.scheduler = Scheduler(policy=sched.policy)
+        self.scheduler = Scheduler(policy=sched.policy,
+                                   tracer=self.tracer, metrics=self.metrics_registry)
         self.instances: Dict[int, Instance] = {}
         self.by_block: Dict[str, List[int]] = defaultdict(list)
         # chain adjacency prior for locality placement (§5.3)
@@ -440,6 +447,10 @@ class Simulation(Server):
             return
         inst.busy = True
         inst.last_used = self.now
+        # same metric names as the real executor: one batched service at
+        # one block instance == one group call at its batch occupancy
+        self.metrics_registry.inc("group_calls")
+        self.metrics_registry.observe("group_batch", len(batch))
         cost = self.cfg.blocks[inst.block_id].cost
         tokens = sum(r.prompt_len if r.tokens_done == 0 else 1 for r in batch)
         ctx = max(r.total_len for r in batch)
@@ -485,6 +496,13 @@ class Simulation(Server):
             if req.tokens_done >= req.gen_len:
                 req.t_done = handoff_time
                 self.done.append(req)
+                self.tracer.event(req.rid, "finish", t=handoff_time,
+                                  tokens=req.tokens_done)
+                self.metrics_registry.inc("completed")
+                self.metrics_registry.inc("tokens_emitted", req.gen_len)
+                self.metrics_registry.observe("latency_s", req.latency())
+                self.metrics_registry.observe("instance_queue_wait_s", req.queue_time)
+                self.metrics_registry.observe("transfer_s", req.transfer_time)
                 for key in list(self.kv_owner):
                     if key[0] == req.rid:
                         del self.kv_owner[key]
@@ -587,7 +605,8 @@ class Simulation(Server):
         return [ServeResult(rid=r.rid, app=r.app, latency=r.latency(),
                             info={"queue_time": r.queue_time,
                                   "transfer_time": r.transfer_time,
-                                  "adaptive_hops": r.adaptive_hops})
+                                  "adaptive_hops": r.adaptive_hops,
+                                  "trace": self.tracer.trace(r.rid).to_dict()})
                 for r in self.done[done_before:]]
 
     def drain(self) -> List[ServeResult]:
@@ -631,4 +650,8 @@ class Simulation(Server):
             "adaptive_served": sum(1 for r in self.done if r.adaptive_hops),
             "spec_attempts": self.spec_attempts,
             "spec_hits": self.spec_hits,
+            "queue_wait_p95_s": self.metrics_registry.histogram(
+                "instance_queue_wait_s").percentile(95),
+            "group_batch_mean": self.metrics_registry.histogram(
+                "group_batch").summary()["mean"],
         }
