@@ -4,7 +4,11 @@ Decode tokens/sec for N mixed-app requests served through the
 continuous-batching BlockEngine (one submit-all + drain) versus sequential
 per-request ``generate()`` calls on an identical engine.  Both paths run
 the same paged-KV numerics; the delta is cross-request batching on shared
-blocks.  Emits ``BENCH_serving.json``.
+blocks.  A third pass re-runs the batched workload with §5.2 draft-verify
+speculation enabled (same tokens, verify-exact accept rule) and reports
+its throughput plus the spec_attempts/spec_hits/spec_accept_rate
+counters.  The regression-gate key ``batched_tokens_per_s`` always comes
+from the spec-OFF pass.  Emits ``BENCH_serving.json``.
 
     PYTHONPATH=src:. python benchmarks/serving.py --requests 8 --gen-len 32
 """
@@ -17,14 +21,17 @@ import time
 import numpy as np
 
 
-def build(args):
+def build(args, *, speculation: bool = False):
     from repro.serving.demo import build_demo_zoo
     from repro.serving.engine import BlockEngine, EngineConfig
 
     cfg, _, zoo = build_demo_zoo(seed=0)
     max_len = args.prompt_len + args.gen_len
-    engine = BlockEngine(zoo, max_len=max_len,
-                         config=EngineConfig(max_active=args.requests))
+    engine = BlockEngine(zoo, max_len=max_len, config=EngineConfig(
+        max_active=args.requests,
+        speculation=speculation,
+        spec_lookahead=getattr(args, "spec_lookahead", 4),
+        spec_prune_ratio=getattr(args, "spec_prune_ratio", 0.25)))
     return cfg, zoo, engine
 
 
@@ -144,6 +151,10 @@ def run(requests: int = 8, gen_len: int = 32, prompt_len: int = 16):
         ("serving/group_calls_per_step", report["group_calls_per_step"],
          "fused target<=chains"),
         ("serving/host_syncs", report["host_syncs"], "measured run"),
+        ("serving/spec_tokens_per_s",
+         report.get("spec_batched_tokens_per_s", 0.0), "spec-on pass"),
+        ("serving/spec_accept_rate", report.get("spec_accept_rate", 0.0),
+         f"of {report.get('spec_attempts', 0)} drafts"),
     ]
 
 
@@ -171,7 +182,11 @@ def _measure(args) -> dict:
         engine.tracer.write_chrome_trace(args.trace_out)
     if getattr(args, "metrics_out", None):
         engine.metrics.write(args.metrics_out)
+    spec = {}
+    if getattr(args, "speculation", True):
+        spec = _measure_spec(args, b_tps, b_results)
     return {
+        **spec,
         **latency_percentiles(b_results),
         **request_time_percentiles(b_results),
         **dispatch,
@@ -189,6 +204,44 @@ def _measure(args) -> dict:
     }
 
 
+def _measure_spec(args, off_tps: float, off_results) -> dict:
+    """Speculation pass: the same batched workload on a spec-enabled engine
+    (fresh engine — slot sizing and fused-fn caches differ).  Asserts token
+    parity against the spec-off results (verify-exact accept rule: the
+    committed stream is the plain fused path, bit for bit)."""
+    cfg, zoo, engine = build(args, speculation=True)
+    bench_batched(cfg, zoo, engine, args, seed=123)  # warmup/compile
+    engine.tracer.clear()
+    trials = [bench_batched(cfg, zoo, engine, args, seed=0)
+              for _ in range(getattr(args, "trials", 3))]
+    toks, dt, results, _ = min(trials, key=lambda t: t[1])
+    # rids differ between engines (each counts from 0 through its warmup),
+    # but submission order is deterministic, so sort-by-rid aligns requests
+    for i, (a, b) in enumerate(zip(sorted(off_results, key=lambda r: r.rid),
+                                   sorted(results, key=lambda r: r.rid))):
+        if not np.array_equal(a.tokens, b.tokens):
+            raise AssertionError(
+                f"speculative decode diverged from fused path (req #{i})")
+    tps = toks / max(dt, 1e-9)
+    stats = dict(engine.stats)
+    att, hits = stats.get("spec_attempts", 0), stats.get("spec_hits", 0)
+    if getattr(args, "spec_trace_out", None):
+        engine.tracer.write_chrome_trace(args.spec_trace_out)
+    if getattr(args, "spec_metrics_out", None):
+        engine.metrics.write(args.spec_metrics_out)
+    return {
+        "spec_batched_tokens": toks,
+        "spec_batched_wall_s": round(dt, 4),
+        "spec_batched_tokens_per_s": round(tps, 2),
+        "spec_speedup_vs_off": round(tps / max(off_tps, 1e-9), 3),
+        "spec_attempts": att,
+        "spec_hits": hits,
+        "spec_accept_rate": round(hits / att, 4) if att else 0.0,
+        "spec_lookahead": getattr(args, "spec_lookahead", 4),
+        "spec_prune_ratio": getattr(args, "spec_prune_ratio", 0.25),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
@@ -202,6 +255,18 @@ def main():
                          "trials (load in chrome://tracing / Perfetto)")
     ap.add_argument("--metrics-out", default=None,
                     help="write the engine metrics registry snapshot JSON")
+    ap.add_argument("--speculation", dest="speculation",
+                    action="store_true", default=True,
+                    help="also run the §5.2 spec-enabled pass (default)")
+    ap.add_argument("--no-speculation", dest="speculation",
+                    action="store_false",
+                    help="skip the spec-enabled pass")
+    ap.add_argument("--spec-lookahead", type=int, default=4)
+    ap.add_argument("--spec-prune-ratio", type=float, default=0.25)
+    ap.add_argument("--spec-trace-out", default=None,
+                    help="Chrome trace of the spec-enabled pass")
+    ap.add_argument("--spec-metrics-out", default=None,
+                    help="metrics snapshot of the spec-enabled pass")
     args = ap.parse_args()
     report = _measure(args)
     with open(args.out, "w") as f:

@@ -1,10 +1,17 @@
 """End-to-end driver: serve a small multi-tenant model zoo through the
 unified Server API — continuous-batching real JAX execution (shared paged
-KV pool, cross-app batching) plus the cluster-scale discrete-event
-evaluation of the same scheduler on the paper's 12-device cluster.
+KV pool, cross-app batching, optional §5.2 draft-verify speculation) plus
+the cluster-scale discrete-event evaluation of the same scheduler on the
+paper's 12-device cluster.
 
     PYTHONPATH=src python examples/serve_multitenant.py
+    PYTHONPATH=src python examples/serve_multitenant.py --no-speculation
+
+Scheduler/speculation flags come straight from ``SchedulerConfig.add_args``
+(one source of truth with the simulator and the launcher).
 """
+import argparse
+import dataclasses
 import time
 
 import jax
@@ -12,7 +19,11 @@ import numpy as np
 
 from repro.serving.api import ServeRequest
 from repro.serving.demo import build_demo_zoo
-from repro.serving.engine import BlockEngine, adaptive_serving_similarity
+from repro.serving.engine import (
+    BlockEngine,
+    EngineConfig,
+    adaptive_serving_similarity,
+)
 from repro.serving.request import as_serve_requests, generate_trace
 from repro.serving.simulator import (
     SchedulerConfig,
@@ -22,9 +33,19 @@ from repro.serving.simulator import (
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    SchedulerConfig.add_args(ap)
+    args = ap.parse_args()
+    sched = SchedulerConfig.from_args(args)
+
     # ---- real execution: continuous batching across three tenants ----
     cfg, _, zoo = build_demo_zoo(seed=0)
-    engine = BlockEngine(zoo, max_len=64)
+    engine = BlockEngine(zoo, max_len=64, config=EngineConfig(
+        policy=sched.policy,
+        speculation=sched.speculation,
+        spec_lookahead=sched.spec_lookahead,
+        spec_prune_ratio=sched.spec_prune_ratio,
+        spec_min_accept=sched.spec_min_accept))
     rng = np.random.RandomState(7)
     apps = ("base", "vicuna", "app-lora")
     for i in range(12):  # 12 in-flight requests, mixed apps
@@ -38,6 +59,11 @@ def main():
     print(f"continuous batching: {len(results)} reqs x 3 apps -> {toks} "
           f"tokens in {dt:.2f}s ({toks / dt:.1f} tok/s, "
           f"{engine.stats['group_calls']} batched block calls)")
+    if sched.speculation:
+        print(f"speculation       : {engine.stats['spec_hits']}/"
+              f"{engine.stats['spec_attempts']} drafts accepted "
+              f"(rate {engine.metrics.gauge('spec_accept_rate').value:.2f},"
+              f" lookahead {sched.spec_lookahead})")
     for r in sorted(results, key=lambda r: r.rid)[:3]:
         print(f"  [{r.app:8s}] rid={r.rid} sample={r.tokens[:6].tolist()}")
 
@@ -55,7 +81,7 @@ def main():
         trace = generate_trace(list(scfg.chains), total_requests=400,
                                duration_s=600, seed=0,
                                prompt_len=(64, 512), gen_len=(64, 256))
-        server = Simulation(scfg, SchedulerConfig(mode=mode))
+        server = Simulation(scfg, dataclasses.replace(sched, mode=mode))
         for req in as_serve_requests(trace):
             server.submit(req)
         server.drain()

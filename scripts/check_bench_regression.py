@@ -55,9 +55,13 @@ def main() -> int:
     got = fresh[KEY]
     print(f"{KEY}: fresh={got:.2f} committed={base[KEY]:.2f} "
           f"floor={floor:.2f} (tolerance {args.tolerance:.0%})")
+    # spec_* fields are informational (warn-only): the gate key above is
+    # always the spec-OFF pass, so speculation can never mask a regression
     for extra in ("group_calls_per_step", "host_syncs", "step_wall_p50_s",
                   "ttft_p50_s", "ttft_p95_s", "queue_wait_p95_s",
-                  "block_batch_mean", "block_util_frac"):
+                  "block_batch_mean", "block_util_frac",
+                  "spec_batched_tokens_per_s", "spec_speedup_vs_off",
+                  "spec_attempts", "spec_hits", "spec_accept_rate"):
         if extra in fresh:
             print(f"  {extra}: fresh={fresh[extra]} "
                   f"committed={base.get(extra, 'n/a')}")

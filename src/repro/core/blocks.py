@@ -299,24 +299,17 @@ def chain_signature(steps) -> Tuple:
                  for block, adapters in steps)
 
 
-def chain_decode_fused(steps, pool_index, tokens, pools_k, pools_v, tables,
-                       kv_len, *, attn_impl: str = "auto"):
-    """One full-chain decode megastep for a batch of sequences, designed to
-    be jitted once per chain signature (DESIGN.md §2).
+def _chain_step_fused(steps, pool_index, tokens, pools_k, pools_v, tables,
+                      kv_len, attn_impl: str):
+    """One single-token walk of a whole chain over the paged pools — the
+    shared body of ``chain_decode_fused`` and of every draft/verify
+    sub-step inside ``chain_decode_spec_fused``.  The speculative verify
+    pass reuses THIS exact computation (same ops, same barriers) so its
+    token stream is bitwise identical to the plain fused path.
 
-    Runs embedding -> every attention/MLP/adapter hop (paged-KV decode with
-    in-computation single-token K/V scatter) -> lm_head -> greedy argmax +
-    softmax, with no Python dispatch between hops.
-
-    tokens: (B,) pending token ids; pools_k/pools_v: tuples of page slabs,
-    one per KV-pool signature the chain touches; pool_index[i]: which slab
-    the i-th attention hop uses; tables: tuple of (B, n) page tables, one
-    per attention hop; kv_len: (B,) tokens already cached.
-
-    Returns (next_tokens, probs, pools_k, pools_v, kv_len + 1).
-    """
+    pools_k/pools_v are lists and are threaded through; returns
+    (next_tokens, probs, pools_k, pools_v)."""
     x = tokens[:, None]  # (B, 1) ids; the embed hop maps them to hidden
-    pools_k, pools_v = list(pools_k), list(pools_v)
     hop = 0
     for block, adapters in steps:
         if block.has_kv:
@@ -337,7 +330,112 @@ def chain_decode_fused(steps, pool_index, tokens, pools_k, pools_v, tables,
     logits = x[:, 0]  # (B, V)
     next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return next_tokens, probs, pools_k, pools_v
+
+
+def chain_decode_fused(steps, pool_index, tokens, pools_k, pools_v, tables,
+                       kv_len, *, attn_impl: str = "auto"):
+    """One full-chain decode megastep for a batch of sequences, designed to
+    be jitted once per chain signature (DESIGN.md §2).
+
+    Runs embedding -> every attention/MLP/adapter hop (paged-KV decode with
+    in-computation single-token K/V scatter) -> lm_head -> greedy argmax +
+    softmax, with no Python dispatch between hops.
+
+    tokens: (B,) pending token ids; pools_k/pools_v: tuples of page slabs,
+    one per KV-pool signature the chain touches; pool_index[i]: which slab
+    the i-th attention hop uses; tables: tuple of (B, n) page tables, one
+    per attention hop; kv_len: (B,) tokens already cached.
+
+    Returns (next_tokens, probs, pools_k, pools_v, kv_len + 1).
+    """
+    pools_k, pools_v = list(pools_k), list(pools_v)
+    next_tokens, probs, pools_k, pools_v = _chain_step_fused(
+        steps, pool_index, tokens, pools_k, pools_v, tables, kv_len,
+        attn_impl)
     return next_tokens, probs, tuple(pools_k), tuple(pools_v), kv_len + 1
+
+
+def chain_decode_spec_fused(steps, sur_steps, pool_index, tokens, pools_k,
+                            pools_v, tables, kv_len, budget, *,
+                            lookahead: int, attn_impl: str = "auto"):
+    """Draft-verify speculative decode megastep (paper §5.2 ported to the
+    real engine, DESIGN.md §2): one jitted call that commits up to
+    ``lookahead`` tokens per sequence while staying bitwise identical to
+    ``lookahead`` plain ``chain_decode_fused`` calls.
+
+    Phase 1 (draft): the surrogate chain ``sur_steps`` — the same chain
+    with its expensive FFN hops structurally pruned
+    (``core.surrogates.build_surrogate(prune_kv=False)``, so every
+    attention hop keeps the full chain's KV signature and page tables) —
+    runs ``lookahead - 1`` sequential single-token steps, drafting tokens
+    d_1..d_{k-1} after the pending token p.  Its K/V writes land in the
+    shared pools at positions kv_len..kv_len+k-2 as scratch.
+
+    Phase 2 (verify): the full chain replays [p, d_1, .., d_{k-1}] through
+    the exact ``_chain_step_fused`` computation, overwriting the draft
+    scratch with true K/V and producing the true next token n_j at every
+    position.  The accept rule is verify-exact: d_j is accepted iff it
+    equals n_{j-1}, so the committed stream is the full model's greedy
+    stream, bit for bit.
+
+    Rollback is positional: ``kv_len`` only advances past accepted
+    positions, so K/V written beyond the accepted prefix is dead — later
+    steps overwrite those slots and attention masks them out meanwhile.
+    Callers must size KV slots with ``lookahead`` tokens of headroom
+    because both phases write up to ``kv_len + lookahead - 1``.
+
+    budget: (B,) max tokens each lane may commit this call (the engine
+    passes remaining gen budget minus one, keeping the pending-token
+    finish protocol intact); accepted drafts are clamped to ``budget - 1``.
+
+    Returns (commit_tok (B, k) committed-token candidates [p, d_1, ..],
+    commit_cnt (B,) how many of them committed (>= 1), accepted (B,)
+    drafts accepted, attempts (B,) drafts that could have committed,
+    next_tokens (B,) new pending token, probs (B, V) its distribution,
+    pools_k, pools_v, kv_len + commit_cnt).
+    """
+    k = lookahead
+    if k < 2:
+        raise ValueError("speculative decode needs lookahead >= 2")
+    B = tokens.shape[0]
+    pools_k, pools_v = list(pools_k), list(pools_v)
+    # phase 1: sequential surrogate drafts (cheap pruned-FFN chain steps)
+    cur = tokens
+    drafts = []
+    for j in range(k - 1):
+        cur, _, pools_k, pools_v = _chain_step_fused(
+            sur_steps, pool_index, cur, pools_k, pools_v, tables,
+            kv_len + j, attn_impl)
+        drafts.append(cur)
+    # pin the phase boundary: draft numerics must not fuse into the verify
+    # pass (verify must stay bitwise identical to the plain fused path)
+    pools_k, pools_v, drafts = jax.lax.optimization_barrier(
+        (pools_k, pools_v, drafts))
+    # phase 2: exact sequential verify of [p, d_1, .., d_{k-1}]
+    inputs = [tokens] + drafts
+    outs, probs_steps = [], []
+    for j in range(k):
+        nxt, probs, pools_k, pools_v = _chain_step_fused(
+            steps, pool_index, inputs[j], pools_k, pools_v, tables,
+            kv_len + j, attn_impl)
+        outs.append(nxt)
+        probs_steps.append(probs)
+    commit_tok = jnp.stack(inputs, axis=1)    # (B, k)
+    outs_m = jnp.stack(outs, axis=1)          # (B, k): n_0..n_{k-1}
+    probs_m = jnp.stack(probs_steps, axis=1)  # (B, k, V)
+    # accept: longest drafted prefix matching the true argmaxes, clamped so
+    # a lane never commits past its remaining generation budget
+    match = (commit_tok[:, 1:] == outs_m[:, :-1]).astype(jnp.int32)
+    accepted = jnp.cumprod(match, axis=1).sum(axis=1)          # (B,)
+    attempts = jnp.minimum(k - 1, jnp.maximum(budget - 1, 0))  # (B,)
+    accepted = jnp.minimum(accepted, attempts)
+    commit_cnt = accepted + 1
+    lane = jnp.arange(B)
+    next_tokens = outs_m[lane, accepted]
+    probs_out = probs_m[lane, accepted]
+    return (commit_tok, commit_cnt, accepted, attempts, next_tokens,
+            probs_out, tuple(pools_k), tuple(pools_v), kv_len + commit_cnt)
 
 
 def chain_prefill_fused(steps, tokens, lens):

@@ -21,8 +21,17 @@ def _topk_mask_indices(scores, keep: int):
     return jnp.sort(idx)
 
 
-def build_surrogate(block: Block, prune_ratio: float = 0.5) -> Block:
-    """Structured-prune a 'layer' (or 'ffn'/'attention') block."""
+def build_surrogate(block: Block, prune_ratio: float = 0.5, *,
+                    prune_kv: bool = True) -> Block:
+    """Structured-prune a 'layer' (or 'ffn'/'attention') block.
+
+    ``prune_kv=False`` restricts pruning to the FFN channels, leaving the
+    attention projections — and therefore the block's ``kv_signature`` —
+    untouched.  The serving engine's speculative decode path needs this:
+    an FFN-only surrogate reads and writes the *same* paged KV pools and
+    page tables as the full block, so drafts need no surrogate-side KV
+    management (their pool writes are scratch the verify pass overwrites).
+    """
     p = dict(block.params)
     cfg = block.cfg
     new_cfg = cfg
@@ -37,7 +46,7 @@ def build_surrogate(block: Block, prune_ratio: float = 0.5) -> Block:
         p["w_up"] = p["w_up"][:, idx]
         p["w_down"] = p["w_down"][idx, :]
         new_cfg = new_cfg.replace(d_ff=keep)
-    if "wq" in p and block.kind in ("layer", "attention"):
+    if prune_kv and "wq" in p and block.kind in ("layer", "attention"):
         H = p["wq"].shape[1]
         KVH = p["wk"].shape[1]
         G = H // KVH

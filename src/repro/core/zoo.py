@@ -14,6 +14,7 @@ Lazy partitioning (Fig. 11):
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Tuple
 
@@ -48,6 +49,12 @@ class BlockZoo:
         self.stitches: Dict[Tuple[int, int], str] = {}  # (d_in,d_out) -> block id
         self.profiles: Dict[str, ProfileRecord] = {}
         self.surrogates: Dict[str, str] = {}  # block id -> surrogate block id
+        # bounded surrogate cache for speculative serving (paper §5.2):
+        # keyed by (parent block id — which embeds the parent params'
+        # tree_hash — prune ratio, prune_kv); LRU-evicted so a long-lived
+        # engine serving many chains cannot grow the zoo without bound
+        self.surrogate_cache_max = 32
+        self._surrogate_cache: "OrderedDict[Tuple, str]" = OrderedDict()
         # bookkeeping for Fig. 5 (redundancy of per-model provisioning)
         self.registered_model_bytes: Dict[str, int] = {}
 
@@ -162,6 +169,36 @@ class BlockZoo:
         att_id, ffn_id = self._add_block(att), self._add_block(ffn)
         blk.meta["split"] = (att_id, ffn_id)
         return att_id, ffn_id
+
+    # ------------------------------------------------------------------
+    def surrogate_for(self, block_id: str, prune_ratio: float, *,
+                      prune_kv: bool = False) -> str:
+        """Return (building and registering on first use) the surrogate of
+        ``block_id`` at ``prune_ratio`` for speculative serving (§5.2).
+
+        The cache key is (parent block id, ratio, prune_kv) — the parent id
+        embeds the parent params' ``tree_hash``, so a re-registered block
+        with different weights gets a fresh surrogate.  Eviction removes
+        the surrogate block from the zoo as well (the engine rebuilds it on
+        next use), keeping surrogate storage bounded."""
+        from repro.core.surrogates import build_surrogate
+
+        key = (block_id, round(float(prune_ratio), 6), bool(prune_kv))
+        sid = self._surrogate_cache.get(key)
+        if sid is not None:
+            self._surrogate_cache.move_to_end(key)
+            return sid
+        sur = build_surrogate(self.blocks[block_id], prune_ratio,
+                              prune_kv=prune_kv)
+        self.blocks[sur.id] = sur
+        self.surrogates[block_id] = sur.id
+        self._surrogate_cache[key] = sur.id
+        while len(self._surrogate_cache) > self.surrogate_cache_max:
+            old_key, old_sid = self._surrogate_cache.popitem(last=False)
+            self.blocks.pop(old_sid, None)
+            if self.surrogates.get(old_key[0]) == old_sid:
+                del self.surrogates[old_key[0]]
+        return sur.id
 
     # ------------------------------------------------------------------
     def add_equivalence(self, a: str, b: str, score: float):

@@ -53,9 +53,17 @@ def run_real(args) -> dict:
     from repro.serving.engine import BlockEngine, EngineConfig
 
     cfg, _, zoo = build_demo_zoo(seed=0)
+    # engine-side §5.2 speculation rides the shared SchedulerConfig flags:
+    # --speculation/--no-speculation, --spec-lookahead, --spec-prune-ratio,
+    # --spec-min-accept toggle the real draft-verify decode path here
     engine = BlockEngine(zoo, max_len=args.max_len,
-                         config=EngineConfig(max_active=args.max_batch,
-                                             policy=args.policy))
+                         config=EngineConfig(
+                             max_active=args.max_batch,
+                             policy=args.policy,
+                             speculation=args.speculation,
+                             spec_lookahead=args.spec_lookahead,
+                             spec_prune_ratio=args.spec_prune_ratio,
+                             spec_min_accept=args.spec_min_accept))
     apps = list(zoo.chains)
     rng = np.random.RandomState(0)
     t0 = time.perf_counter()
@@ -82,18 +90,23 @@ def run_real(args) -> dict:
         engine.write_trace(args.trace_out)
     if getattr(args, "metrics_out", None):
         engine.write_metrics(args.metrics_out)
+    stats = dict(engine.stats)
     return {
         "completed": len(results),
         "generated_tokens": gen_tokens,
         "wall_s": round(dt, 3),
         "tokens_per_s": round(gen_tokens / max(dt, 1e-9), 2),
+        "spec_attempts": stats.get("spec_attempts", 0),
+        "spec_hits": stats.get("spec_hits", 0),
+        "spec_accept_rate": round(
+            engine.metrics.gauge("spec_accept_rate").value, 4),
         "latency_p50_s": pct(0.50),
         "latency_p95_s": pct(0.95),
         "ttft_p50_s": round(ttft[50], 4),
         "ttft_p95_s": round(ttft[95], 4),
         "queue_wait_p50_s": round(qwait[50], 4),
         "queue_wait_p95_s": round(qwait[95], 4),
-        "engine_stats": dict(engine.stats),
+        "engine_stats": stats,
         "sample": results[0].tokens[:8].tolist() if results else [],
     }
 

@@ -29,6 +29,7 @@ from repro.core.blocks import (
     block_decode_paged,
     block_prefill_raw,
     chain_decode_fused,
+    chain_decode_spec_fused,
     chain_prefill_fused,
     chain_signature,
 )
@@ -54,6 +55,15 @@ class DecodeState:
     host until a member finishes, is preempted, or the group re-forms.
     ``states`` are the engine's per-request records (duck-typed: ``rid``,
     ``tokens``, ``next_token``, ``probs_last``, ``kv_len``).
+
+    ``emitted`` entries are ``(tokens, counts)`` draft/commit buffers: a
+    device ``(B, c)`` token block plus the host ``(B,)`` per-lane count of
+    how many of its columns committed.  A plain fused step appends a
+    one-column block with count 1 everywhere; a speculative step appends
+    its ``(B, lookahead)`` commit candidates with the per-lane accepted
+    counts.  ``buffered_counts`` mirrors the running per-lane totals on
+    the host so the engine's finish logic sees exact progress without
+    materializing the token backlog.
     """
     rids: Tuple[int, ...]
     sig: Tuple
@@ -62,12 +72,10 @@ class DecodeState:
     kv_len: jnp.ndarray      # (B,) tokens cached, tracked on device
     tables: Tuple[jnp.ndarray, ...]  # staged (B, n) page table per attn hop
     kv_len0: List[int]       # host kv_len at creation (host mirror base)
-    emitted: List[jnp.ndarray] = field(default_factory=list)  # (B,) per step
+    emitted: List[Tuple[jnp.ndarray, np.ndarray]] = field(
+        default_factory=list)
+    buffered_counts: List[int] = field(default_factory=list)  # per lane
     probs: Optional[jnp.ndarray] = None  # (B, V) probs of latest next_token
-
-    @property
-    def steps_taken(self) -> int:
-        return len(self.emitted)
 
 
 class BlockExecutor:
@@ -83,6 +91,8 @@ class BlockExecutor:
         self._c_decode_tokens = self.metrics.counter("decode_tokens")
         self._c_group_calls = self.metrics.counter("group_calls")
         self._c_host_syncs = self.metrics.counter("host_syncs")
+        self._c_spec_attempts = self.metrics.counter("spec_attempts")
+        self._c_spec_hits = self.metrics.counter("spec_hits")
         # per-block batch occupancy: every batched device call observes its
         # batch width (compare p50/mean against EngineConfig.max_block_batch)
         self._h_group_batch = self.metrics.histogram("group_batch")
@@ -91,6 +101,8 @@ class BlockExecutor:
         # fused megastep + batched prefill, one jitted callable per chain
         # signature (prefill retraces per (B, bucket) shape)
         self._fused_fns: Dict[Tuple, Tuple[object, Tuple]] = {}
+        # speculative megastep per (chain sig, surrogate sig, lookahead)
+        self._spec_fns: Dict[Tuple, Tuple[object, Tuple]] = {}
         self._chain_prefill_fns: Dict[Tuple, object] = {}
         # device-resident decode state per fused group, keyed by rid tuple
         self.decode_states: Dict[Tuple[int, ...], DecodeState] = {}
@@ -162,7 +174,9 @@ class BlockExecutor:
             if k_r is not None:
                 _, pool = kv.pool_for(block)
                 if (state.rid, i) not in pool.slots:
-                    pool.alloc(state.rid, i, state.prompt_len + state.gen_len)
+                    slot = (getattr(state, "slot_tokens", 0)
+                            or state.prompt_len + state.gen_len)
+                    pool.alloc(state.rid, i, slot)
                 pool.write_prefill(state.rid, i, k_r, v)
         state.kv_len = len(tokens)
         if sample:
@@ -226,13 +240,10 @@ class BlockExecutor:
 
     # -- fused chain-step decode (device-resident megastep) ------------------
 
-    def fused_fn(self, steps, sig):
-        """One jitted megastep per chain signature; returns (fn, pool_keys)
-        where ``pool_keys`` orders the KV-pool signatures the chain needs."""
-        cached = self._fused_fns.get(sig)
-        if cached is not None:
-            return cached
-        impl = self.attn_impl
+    @staticmethod
+    def _pool_layout(steps) -> Tuple[List[Tuple], List[int]]:
+        """KV-pool layout of a chain: the ordered list of distinct pool
+        signatures it touches and, per attention hop, the index into it."""
         pool_keys: List[Tuple] = []
         pool_index: List[int] = []
         for block, _ in steps:
@@ -244,6 +255,16 @@ class BlockExecutor:
                 if key not in pool_keys:
                     pool_keys.append(key)
                 pool_index.append(pool_keys.index(key))
+        return pool_keys, pool_index
+
+    def fused_fn(self, steps, sig):
+        """One jitted megastep per chain signature; returns (fn, pool_keys)
+        where ``pool_keys`` orders the KV-pool signatures the chain needs."""
+        cached = self._fused_fns.get(sig)
+        if cached is not None:
+            return cached
+        impl = self.attn_impl
+        pool_keys, pool_index = self._pool_layout(steps)
 
         @functools.partial(jax.jit, donate_argnums=(1, 2))
         def fn(tok, pools_k, pools_v, tables, kv_len):
@@ -255,13 +276,43 @@ class BlockExecutor:
         self._fused_fns[sig] = out
         return out
 
+    def spec_fn(self, steps, sur_steps, sig, lookahead: int):
+        """Jitted draft-verify megastep (paper §5.2) per (chain signature,
+        surrogate signature, lookahead).  The surrogate chain must share the
+        full chain's KV-pool layout (FFN-only surrogates guarantee this);
+        verification reuses the exact fused-step graph, so committed tokens
+        are bit-identical to the plain fused path."""
+        key = (sig, chain_signature(sur_steps), lookahead)
+        cached = self._spec_fns.get(key)
+        if cached is not None:
+            return cached
+        impl = self.attn_impl
+        pool_keys, pool_index = self._pool_layout(steps)
+        sur_keys, _ = self._pool_layout(sur_steps)
+        if tuple(sur_keys) != tuple(pool_keys):
+            raise ValueError(
+                "surrogate chain must share the full chain's KV-pool layout")
+
+        @functools.partial(jax.jit, donate_argnums=(1, 2))
+        def fn(tok, pools_k, pools_v, tables, kv_len, budget):
+            return chain_decode_spec_fused(
+                steps, sur_steps, pool_index, tok, pools_k, pools_v,
+                tables, kv_len, budget, lookahead=lookahead, attn_impl=impl)
+
+        out = (fn, tuple(pool_keys))
+        self._spec_fns[key] = out
+        return out
+
     def buffered(self, rid: int) -> int:
-        """Decode steps a request has taken since its host state was last
+        """Tokens a request has committed since its host state was last
         synced (0 when it is not device-resident)."""
         key = self._rid_group.get(rid)
         if key is None:
             return 0
-        return self.decode_states[key].steps_taken
+        ds = self.decode_states[key]
+        if not ds.buffered_counts:
+            return 0
+        return ds.buffered_counts[ds.rids.index(rid)]
 
     def retire_states(self, keep: frozenset = frozenset()) -> None:
         """Sync-and-drop every DecodeState whose rid tuple is not in
@@ -282,15 +333,15 @@ class BlockExecutor:
     def _sync_state(self, ds: DecodeState) -> None:
         if not ds.emitted:
             return  # never stepped: host state is still authoritative
-        emitted, nxt, probs = jax.device_get(
-            (jnp.stack(ds.emitted), ds.next_token, ds.probs))
+        blocks, nxt, probs = jax.device_get(
+            (tuple(t for t, _ in ds.emitted), ds.next_token, ds.probs))
         self._c_host_syncs.inc()
-        n = ds.steps_taken
         for i, s in enumerate(ds.states):
-            s.tokens.extend(int(t) for t in emitted[:, i])
+            for t, cnt in zip(blocks, (c for _, c in ds.emitted)):
+                s.tokens.extend(int(tok) for tok in t[i, :cnt[i]])
             s.next_token = int(nxt[i])
             s.probs_last = probs[i]
-            s.kv_len = ds.kv_len0[i] + n
+            s.kv_len = ds.kv_len0[i] + ds.buffered_counts[i]
 
     def _make_state(self, states: List, kv: KVManager) -> DecodeState:
         steps = states[0].steps
@@ -307,7 +358,8 @@ class BlockExecutor:
             next_token=jnp.asarray([s.next_token for s in states], jnp.int32),
             kv_len=jnp.asarray([s.kv_len for s in states], jnp.int32),
             tables=tuple(tables),
-            kv_len0=[s.kv_len for s in states])
+            kv_len0=[s.kv_len for s in states],
+            buffered_counts=[0] * len(states))
         self.decode_states[rids] = ds
         for r in rids:
             self._rid_group[r] = rids
@@ -331,11 +383,58 @@ class BlockExecutor:
                                         ds.kv_len)
         for p, k_new, v_new in zip(pools, pk, pv):
             p.k_pages, p.v_pages = k_new, v_new
-        ds.emitted.append(ds.next_token)
+        B = len(states)
+        ds.emitted.append((ds.next_token[:, None], np.ones(B, np.int64)))
+        for i in range(B):
+            ds.buffered_counts[i] += 1
         ds.next_token = nxt
         ds.probs = probs
         ds.kv_len = kv_len
         self._c_decode_tokens.inc(len(states))
+
+    def spec_step(self, states: List, kv: KVManager, sur_steps,
+                  lookahead: int, budgets: List[int]
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """One draft-verify megastep for one fused group (paper §5.2): the
+        surrogate chain drafts ``lookahead - 1`` tokens, the full chain
+        verifies all positions inside the same jitted call, and per-lane
+        accept/rollback happens on device.  Commits 1..lookahead tokens per
+        lane; returns host ``(attempts, hits, committed)`` arrays (one small
+        count sync per call — the engine needs exact per-lane progress for
+        finish decisions).  ``budgets[i]`` is how many tokens lane i may
+        still commit (rem); the device clamps drafts so the pending-token
+        protocol never overshoots it."""
+        rids = tuple(s.rid for s in states)
+        ds = self.decode_states.get(rids)
+        if ds is None:
+            ds = self._make_state(states, kv)
+        fn, pool_keys = self.spec_fn(states[0].steps, sur_steps, ds.sig,
+                                     lookahead)
+        pools = [kv.pools[k] for k in pool_keys]
+        pk = tuple(p.k_pages for p in pools)
+        pv = tuple(p.v_pages for p in pools)
+        self._c_group_calls.inc()
+        self._h_group_batch.observe(len(states))
+        budget = jnp.asarray(budgets, jnp.int32)
+        (commit_tok, commit_cnt, accepted, attempts, nxt, probs,
+         pk, pv, kv_len) = fn(ds.next_token, pk, pv, ds.tables,
+                              ds.kv_len, budget)
+        for p, k_new, v_new in zip(pools, pk, pv):
+            p.k_pages, p.v_pages = k_new, v_new
+        cnt_h, acc_h, att_h = (np.asarray(a, np.int64) for a in
+                               jax.device_get((commit_cnt, accepted,
+                                               attempts)))
+        self._c_host_syncs.inc()
+        ds.emitted.append((commit_tok, cnt_h))
+        for i in range(len(states)):
+            ds.buffered_counts[i] += int(cnt_h[i])
+        ds.next_token = nxt
+        ds.probs = probs
+        ds.kv_len = kv_len
+        self._c_decode_tokens.inc(int(cnt_h.sum()))
+        self._c_spec_attempts.inc(int(att_h.sum()))
+        self._c_spec_hits.inc(int(acc_h.sum()))
+        return att_h, acc_h, cnt_h
 
     # -- decode: per-hop batched group execution (fallback path) -------------
 

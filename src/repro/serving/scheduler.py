@@ -219,10 +219,17 @@ class Scheduler:
 
     def form_chain_groups(self, items: Iterable[Any],
                           key_fn: Callable[[Any], Any],
-                          max_batch: int) -> List[List[Any]]:
+                          max_batch: int,
+                          subkey_fn: Optional[Callable[[Any], Any]] = None
+                          ) -> List[List[Any]]:
         """Partition ``items`` into fused-execution groups: one group per
         full-chain signature (``key_fn``), split into chunks of at most
         ``max_batch`` (the §5.2 per-block batch cap applied chain-wide).
+
+        ``subkey_fn`` refines the partition without changing the primary
+        key — the engine uses it to separate speculation-eligible members
+        from ineligible ones (a fused group must step uniformly: every
+        lane in a speculative megastep drafts the same lookahead).
 
         Order is deterministic — groups appear in first-seen signature
         order and members keep their relative order — so a stable running
@@ -230,7 +237,10 @@ class Scheduler:
         executor keep their decode state device-resident."""
         by_key: Dict[Any, List[Any]] = {}
         for item in items:
-            by_key.setdefault(key_fn(item), []).append(item)
+            key = key_fn(item)
+            if subkey_fn is not None:
+                key = (key, subkey_fn(item))
+            by_key.setdefault(key, []).append(item)
         groups: List[List[Any]] = []
         for members in by_key.values():
             for i in range(0, len(members), max_batch):

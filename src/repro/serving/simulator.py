@@ -149,6 +149,12 @@ class SchedulerConfig:
     spec_top_frac: float = 0.10           # top 10% bottleneck instances (§7.1)
     spec_speedup: float = 20.0            # surrogate speedup (Table 4)
     spec_accuracy: float = 0.83           # 192/231 accurate (paper §7.3)
+    # engine-side speculation knobs (real BlockEngine; the discrete-event
+    # model keeps using spec_speedup/spec_accuracy above) — living here so
+    # the auto-CLI plumbing exposes one flag namespace for both backends
+    spec_lookahead: int = 4               # tokens per speculative megastep
+    spec_prune_ratio: float = 0.25        # surrogate FFN prune ratio
+    spec_min_accept: float = 0.1          # disable gate on accept-rate EMA
     placement: str = "locality"           # locality | fragmentation (§5.3/Fig 23)
     scale_queue_threshold: int = 8        # queue length per block -> scale out
     rescale_period: float = 2.0
@@ -242,6 +248,11 @@ class Simulation(Server):
         self.stats = defaultdict(float)
         self.spec_attempts = 0
         self.spec_hits = 0
+        # same stat keys as the real engine's registry (DESIGN.md §8), so
+        # merged/compared snapshots line up name-for-name
+        self.metrics_registry.counter("spec_attempts")
+        self.metrics_registry.counter("spec_hits")
+        self.metrics_registry.set_gauge("spec_accept_rate", 0.0)
         # Server-API state
         self._rid = itertools.count()
         self._placed = False
@@ -475,11 +486,15 @@ class Simulation(Server):
         handoff = t_end
         if inst.speculated and self.sched.speculation:
             self.spec_attempts += len(batch)
+            self.metrics_registry.inc("spec_attempts", len(batch))
             t_sur = t_c / self.sched.spec_speedup
             ok = self.rng.random() < self.sched.spec_accuracy
             if ok:
                 self.spec_hits += len(batch)
+                self.metrics_registry.inc("spec_hits", len(batch))
                 handoff = t_start + t_sur + 0.1 * (t_c - t_sur)
+            self.metrics_registry.set_gauge(
+                "spec_accept_rate", self.spec_hits / self.spec_attempts)
             dev.busy_time += t_sur  # surrogate occupies a parallel stream
         heapq.heappush(self.events, (t_end, next(self._seq),
                                      "service_done", (inst.iid, batch, handoff)))
@@ -650,6 +665,8 @@ class Simulation(Server):
             "adaptive_served": sum(1 for r in self.done if r.adaptive_hops),
             "spec_attempts": self.spec_attempts,
             "spec_hits": self.spec_hits,
+            "spec_accept_rate": (self.spec_hits / self.spec_attempts
+                                 if self.spec_attempts else 0.0),
             "queue_wait_p95_s": self.metrics_registry.histogram(
                 "instance_queue_wait_s").percentile(95),
             "group_batch_mean": self.metrics_registry.histogram(
